@@ -1,0 +1,54 @@
+"""Paper Fig 10 + Fig 11 (simulations).
+
+Fig 10: Rubick vs Synergy with increasing cluster load (down-sampling rate).
+Fig 11: Rubick vs Synergy with an increasing proportion of LLaMA-class
+large models — the paper's key trend: gains GROW with more large models.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import baselines, trace
+from repro.core.cluster import Cluster
+from repro.core.simulator import Simulator
+
+
+def _pair(jobs, cache):
+    cluster = Cluster(n_nodes=8)
+    r = Simulator(cluster, baselines.make_rubick(), fit_cache=cache).run(jobs)
+    s = Simulator(cluster, baselines.ALL["synergy"](), fit_cache=cache).run(jobs)
+    return r, s
+
+
+def run() -> list[dict]:
+    rows = []
+    cache: dict = {}
+    for load in (0.5, 1.0, 2.0, 3.0):
+        t0 = time.time()
+        jobs = trace.generate(n_jobs=50, hours=4, seed=2, load_scale=load)
+        r, s = _pair(jobs, cache)
+        rows.append({
+            "name": f"fig10/load_{load}x",
+            "us_per_call": (time.time() - t0) * 1e6,
+            "derived": {
+                "rubick_avg_jct_h": round(r.avg_jct / 3600, 3),
+                "synergy_avg_jct_h": round(s.avg_jct / 3600, 3),
+                "jct_gain_x": round(s.avg_jct / max(r.avg_jct, 1e-9), 2),
+                "makespan_gain_x": round(
+                    s.makespan / max(r.makespan, 1e-9), 2),
+            }})
+    for frac in (0.2, 0.4, 0.6, 0.8):
+        t0 = time.time()
+        jobs = trace.generate(n_jobs=50, hours=4, seed=3, load_scale=3.0,
+                              large_fraction=frac)
+        r, s = _pair(jobs, cache)
+        rows.append({
+            "name": f"fig11/large_{int(frac*100)}pct",
+            "us_per_call": (time.time() - t0) * 1e6,
+            "derived": {
+                "rubick_avg_jct_h": round(r.avg_jct / 3600, 3),
+                "synergy_avg_jct_h": round(s.avg_jct / 3600, 3),
+                "jct_gain_x": round(s.avg_jct / max(r.avg_jct, 1e-9), 2),
+            }})
+    return rows

@@ -1,0 +1,56 @@
+"""Paper Fig 3 + Fig 7: best-plan adaptation to changing resource limits.
+
+Fig 3 protocol: train a model while stage-wise shrinking resources
+(32 GPUs distributed → 16 → single server 8 → 1 GPU → memory-capped);
+at every stage list the best plan and its throughput, confirming the
+best-plan label CHANGES across stages.  Fig 7 re-runs it for LLaMA-2-7B and
+additionally doubles CPUs in the final stage (offload speedup).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+from repro.core import paper_models
+from repro.core.oracle import AnalyticOracle, profiling_samples
+from repro.core.perfmodel import Alloc, fit
+from repro.core.sensitivity import SensitivityCurve
+
+STAGES = [
+    ("32gpu_4node", Alloc(32, 12 * 32, gpus_per_node=(8, 8, 8, 8))),
+    ("16gpu_4node", Alloc(16, 12 * 16, gpus_per_node=(4, 4, 4, 4))),
+    ("8gpu_1node", Alloc(8, 96)),
+    ("4gpu_1node", Alloc(4, 48)),
+    ("1gpu", Alloc(1, 12)),
+    ("1gpu_2xcpu", Alloc(1, 24)),
+]
+
+
+def run() -> list[dict]:
+    oracle = AnalyticOracle()
+    rows = []
+    for model in ("roberta-355m", "t5-1.2b", "llama2-7b"):
+        prof = paper_models.profile(model)
+        t0 = time.time()
+        k = fit(prof, profiling_samples(prof, oracle))
+        curve = SensitivityCurve(prof, k, max_gpus=32)
+        derived: dict = {}
+        labels = []
+        for stage, alloc in STAGES:
+            pt = curve.best_plan_at_most(alloc.gpus, alloc.cpus,
+                                         alloc.gpus_per_node)
+            derived[f"{stage}_plan"] = pt.plan.strategy if pt.plan else "OOM"
+            derived[f"{stage}_thpt"] = round(pt.throughput, 3)
+            labels.append(derived[f"{stage}_plan"])
+        derived["n_distinct_best_plans"] = len(set(labels))
+        # Fig 7 checks: 1-GPU best plan for the 7B model is ZeRO-Offload,
+        # and doubling CPUs speeds it up
+        if model == "llama2-7b":
+            derived["fig7_offload_at_1gpu"] = "Offload" in derived["1gpu_plan"]
+            derived["fig7_cpu_speedup"] = round(
+                derived["1gpu_2xcpu_thpt"] / max(derived["1gpu_thpt"], 1e-9), 2)
+        rows.append({"name": f"fig3_7/{model}",
+                     "us_per_call": (time.time() - t0) * 1e6,
+                     "derived": derived})
+    return rows

@@ -1,0 +1,35 @@
+"""Paper Fig 6: the GPU sensitivity curve of GPT-2 — best plan per GPU
+count, monotone envelope, flat regions at invalid GPU counts."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import paper_models
+from repro.core.oracle import AnalyticOracle, profiling_samples
+from repro.core.perfmodel import fit
+from repro.core.sensitivity import SensitivityCurve
+
+
+def run() -> list[dict]:
+    prof = paper_models.profile("gpt2-1.5b")
+    oracle = AnalyticOracle()
+    t0 = time.time()
+    k = fit(prof, profiling_samples(prof, oracle))
+    curve = SensitivityCurve(prof, k, max_gpus=16)
+    derived = {}
+    prev = 0.0
+    monotone = True
+    for g in range(1, 17):
+        pt = curve.best_plan(g)
+        env = curve.throughput(g)
+        derived[f"g{g}"] = f"{pt.plan.strategy if pt.plan else '-'}:" \
+                           f"{env:.2f}"
+        monotone &= env >= prev - 1e-9
+        prev = env
+    derived["envelope_monotone"] = monotone
+    derived["flat_points"] = sum(
+        1 for g in range(2, 17)
+        if abs(curve.throughput(g) - curve.throughput(g - 1)) < 1e-9)
+    return [{"name": "fig6/gpt2-sensitivity",
+             "us_per_call": (time.time() - t0) * 1e6, "derived": derived}]

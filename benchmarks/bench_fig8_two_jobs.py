@@ -1,0 +1,53 @@
+"""Paper Fig 8: maximizing total throughput across two jobs on 4 GPUs.
+
+A RoBERTa job and a T5 job share 4 GPUs.  The 'simple' scheduler splits
+2+2 (but may reconfigure plans); Rubick allocates by sensitivity slopes
+(paper: 3 GPUs to T5, 1 to RoBERTa → 1.44 vs 0.78 normalized speedup,
++85%).  Throughput is normalized to each job's rigid 4-GPU baseline, as in
+the paper.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import paper_models
+from repro.core.oracle import AnalyticOracle, profiling_samples
+from repro.core.perfmodel import Alloc, fit
+from repro.core.sensitivity import SensitivityCurve
+
+
+def run() -> list[dict]:
+    oracle = AnalyticOracle()
+    t0 = time.time()
+    curves = {}
+    base = {}
+    for m in ("roberta-355m", "t5-1.2b"):
+        prof = paper_models.profile(m)
+        k = fit(prof, profiling_samples(prof, oracle))
+        curves[m] = SensitivityCurve(prof, k, max_gpus=4)
+        base[m] = curves[m].best_plan_at_most(4).throughput
+
+    def norm_total(split: dict[str, int]) -> float:
+        return sum(curves[m].best_plan_at_most(g).throughput / base[m]
+                   for m, g in split.items() if g > 0)
+
+    simple = norm_total({"roberta-355m": 2, "t5-1.2b": 2})
+    # Rubick: search all integer splits by slope (equivalently exhaustive
+    # for 2 jobs × 4 GPUs)
+    best_split, best_val = None, -1.0
+    for g_t5 in range(0, 5):
+        v = norm_total({"roberta-355m": 4 - g_t5, "t5-1.2b": g_t5})
+        if v > best_val:
+            best_val, best_split = v, g_t5
+    derived = {
+        "simple_2_2_speedup": round(simple, 3),
+        "rubick_speedup": round(best_val, 3),
+        "rubick_t5_gpus": best_split,
+        "improvement_pct": round(100 * (best_val / simple - 1), 1),
+        "plans": {m: curves[m].best_plan_at_most(
+            best_split if m == "t5-1.2b" else 4 - best_split).plan.strategy
+            for m in curves},
+    }
+    return [{"name": "fig8/two-jobs", "us_per_call": (time.time() - t0) * 1e6,
+             "derived": derived}]

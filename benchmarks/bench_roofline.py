@@ -1,0 +1,55 @@
+"""Assignment §Roofline: report the per-(arch × shape) roofline terms from
+the latest dry-run results (benchmarks/results/dryrun_*.json).
+
+This bench does NOT recompile the 512-device cells (that's
+``python -m repro.launch.dryrun --all``, ~1 h); it summarizes their stored
+cost/memory/collective analyses into the three roofline terms.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def run() -> list[dict]:
+    rows = []
+    files = sorted(RESULTS.glob("dryrun_*.json"))
+    if not files:
+        return [{"name": "roofline/missing", "us_per_call": 0,
+                 "derived": {"note": "run repro.launch.dryrun --all first"}}]
+    # prefer the 'baseline' tag, else latest
+    pick = next((f for f in files if "baseline" in f.name), files[-1])
+    data = json.loads(pick.read_text())
+    t0 = time.time()
+    for row in data:
+        if row.get("status") == "skipped":
+            rows.append({"name": f"roofline/{row['arch']}/{row['shape']}",
+                         "us_per_call": 0,
+                         "derived": {"status": "skipped",
+                                     "reason": row["reason"][:90]}})
+            continue
+        if row.get("status") != "ok":
+            rows.append({"name": f"roofline/{row['arch']}/{row['shape']}",
+                         "us_per_call": 0,
+                         "derived": {"status": row.get("status"),
+                                     "error": row.get("error", "")[:90]}})
+            continue
+        rows.append({
+            "name": f"roofline/{row['arch']}/{row['shape']}@{row['mesh']}",
+            "us_per_call": (time.time() - t0) * 1e6,
+            "derived": {
+                "plan": row.get("plan"),
+                "t_compute_ms": round(1e3 * row["t_compute_s"], 2),
+                "t_memory_ms": round(1e3 * row["t_memory_s"], 2),
+                "t_collective_ms": round(1e3 * row["t_collective_s"], 2),
+                "bottleneck": row["bottleneck"],
+                "useful_ratio": round(row["useful_ratio"], 3),
+                "roofline_fraction": round(row["roofline_fraction"], 4),
+                "hbm_gb_per_device": round(
+                    row.get("per_device_peak_bytes", 0) / 1e9, 2),
+            }})
+    return rows

@@ -1,0 +1,64 @@
+"""Paper Table 4: 64-GPU cluster end-to-end comparison.
+
+Three traces (base / BP / MT) × schedulers (Rubick, Sia, Synergy, AntMan,
+Rubick-E/R/N).  Reports avg & P99 JCT and makespan, normalized to Rubick,
+mirroring the paper's table layout.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import baselines, trace
+from repro.core.cluster import Cluster
+from repro.core.simulator import Simulator
+
+N_JOBS = 60
+HOURS = 4.0
+LOAD = 2.0
+SEED = 1
+
+
+def _run_trace(variant: str, scheds: list[str], quotas=None) -> list[dict]:
+    jobs = trace.generate(n_jobs=N_JOBS, hours=HOURS, seed=SEED,
+                          variant=variant, load_scale=LOAD)
+    cluster = Cluster(n_nodes=8)
+    cache: dict = {}
+    rows = []
+    ref_avg = ref_p99 = ref_mk = None
+    for name in scheds:
+        t0 = time.time()
+        sched = baselines.ALL[name](quotas=quotas)
+        res = Simulator(cluster, sched, fit_cache=cache).run(jobs)
+        s = res.summary()
+        if name == "rubick":
+            ref_avg, ref_p99, ref_mk = (s["avg_jct_h"], s["p99_jct_h"],
+                                        s["makespan_h"])
+        derived = {
+            "avg_jct_h": round(s["avg_jct_h"], 3),
+            "p99_jct_h": round(s["p99_jct_h"], 3),
+            "makespan_h": round(s["makespan_h"], 3),
+            "n_reconfig": s["n_reconfig"],
+        }
+        if ref_avg:
+            derived["avg_jct_x"] = round(s["avg_jct_h"] / ref_avg, 2)
+            derived["p99_jct_x"] = round(s["p99_jct_h"] / max(ref_p99, 1e-9), 2)
+            derived["makespan_x"] = round(s["makespan_h"] / ref_mk, 2)
+        if variant == "mt":
+            derived["avg_jct_guaranteed_h"] = round(
+                s.get("avg_jct_guaranteed_h", 0), 3)
+            derived["avg_jct_best_effort_h"] = round(
+                s.get("avg_jct_best_effort_h", 0), 3)
+        rows.append({"name": f"table4/{variant}/{name}",
+                     "us_per_call": (time.time() - t0) * 1e6,
+                     "derived": derived})
+    return rows
+
+
+def run() -> list[dict]:
+    rows = []
+    rows += _run_trace("base", ["rubick", "sia", "synergy",
+                                "rubick-e", "rubick-r", "rubick-n"])
+    rows += _run_trace("bp", ["rubick", "sia", "synergy"])
+    rows += _run_trace("mt", ["rubick", "antman"], quotas={"A": 64})
+    return rows

@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived is compact JSON).
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run table4     # substring filter
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import traceback
+
+BENCHES = [
+    "bench_table2_perfmodel",
+    "bench_fig3_fig7_adaptation",
+    "bench_fig6_sensitivity",
+    "bench_fig8_two_jobs",
+    "bench_table4_cluster",
+    "bench_fig10_fig11_simulation",
+    "bench_fig9_accuracy",
+    "bench_roofline",
+]
+
+
+def main() -> None:
+    flt = sys.argv[1] if len(sys.argv) > 1 else ""
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in BENCHES:
+        if flt and flt not in mod_name:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            for row in mod.run():
+                derived = json.dumps(row.get("derived", {}),
+                                     separators=(",", ":"), default=str)
+                print(f"{row['name']},{row['us_per_call']:.0f},"
+                      f"\"{derived}\"", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{mod_name},0,\"ERROR\"", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Generate EXPERIMENTS.md §Dry-run/§Roofline tables from the stored
+dry-run JSON rows.  Usage:
+    PYTHONPATH=src python benchmarks/summarize_experiments.py
+Prints markdown to stdout (EXPERIMENTS.md embeds the output).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.1f}G" if b < 1e12 else f"{b/1e12:.2f}T"
+
+
+def table(rows, mesh_filter):
+    out = []
+    out.append("| arch | shape | plan | Tc (ms) | Tm (ms) | Tcoll (ms) | "
+               "bound | bottleneck | useful | roofline-frac | HBM/dev |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("mesh") != mesh_filter:
+            continue
+        if r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                       f"*skipped: sub-quadratic-only cell* | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | "
+                       f"{r.get('error','')[:40]} | | | |")
+            continue
+        tb = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('plan','')} "
+            f"| {1e3*r['t_compute_s']:.0f} | {1e3*r['t_memory_s']:.0f} "
+            f"| {1e3*r['t_collective_s']:.0f} | {1e3*tb:.0f}ms "
+            f"| {r['bottleneck']} | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} "
+            f"| {fmt_bytes(r.get('per_device_peak_bytes',0))} |")
+    return "\n".join(out)
+
+
+def main():
+    tag = sys.argv[1] if len(sys.argv) > 1 else "baseline"
+    data = json.loads((RESULTS / f"dryrun_{tag}.json").read_text())
+    print(f"### Single-pod mesh 16×16 (256 chips) — tag={tag}\n")
+    print(table(data, "16x16"))
+    multi = [r for r in data if r.get("mesh") == "2x16x16"]
+    if multi:
+        print(f"\n### Multi-pod mesh 2×16×16 (512 chips) — tag={tag}\n")
+        print(table(data, "2x16x16"))
+    ok = sum(r.get("status") == "ok" for r in data)
+    sk = sum(r.get("status") == "skipped" for r in data)
+    er = len(data) - ok - sk
+    print(f"\n{ok} ok, {sk} documented skips, {er} errors")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Quickstart: Rubick in one file.
+
+1. Profile a model (7 sample points, 3 with ZeRO-Offload) against the
+   cluster oracle;
+2. fit the Sec-4 performance model;
+3. draw the resource-sensitivity curve and pick best plans;
+4. schedule a small trace on a simulated 64-GPU cluster and compare
+   against a plan-agnostic baseline.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import baselines, paper_models, trace
+from repro.core.cluster import Cluster
+from repro.core.oracle import AnalyticOracle, profiling_samples
+from repro.core.perfmodel import fit, prediction_error, Alloc
+from repro.core.sensitivity import SensitivityCurve
+from repro.core.simulator import Simulator
+
+
+def main() -> None:
+    prof = paper_models.profile("llama2-7b")
+    oracle = AnalyticOracle()
+
+    print("== 1. profiling (paper: ~210 s on the real cluster) ==")
+    samples = profiling_samples(prof, oracle)
+    for plan, alloc, t in samples:
+        print(f"   {plan.strategy:24s} {alloc.gpus:2d} GPUs -> {t:7.3f} s/iter")
+
+    print("== 2. fitting the 7-parameter model ==")
+    k = fit(prof, samples)
+    avg, mx = prediction_error(prof, k, samples)
+    print(f"   fit error on profiling set: avg {avg*100:.1f}%  max {mx*100:.1f}%")
+
+    print("== 3. resource sensitivity curve (Fig 6) ==")
+    curve = SensitivityCurve(prof, k, max_gpus=16)
+    for g in (1, 2, 4, 8, 16):
+        pt = curve.best_plan_at_most(g)
+        print(f"   {g:2d} GPUs: best plan {pt.plan.strategy if pt.plan else '-':24s}"
+              f" {pt.throughput:8.2f} samples/s")
+
+    print("== 4. cluster scheduling (Table 4, miniature) ==")
+    jobs = trace.generate(n_jobs=25, hours=2, seed=0, load_scale=2.0)
+    cluster = Cluster(n_nodes=8)
+    cache: dict = {}
+    for name in ("rubick", "rubick-n", "synergy"):
+        sim = Simulator(cluster, baselines.ALL[name](), fit_cache=cache)
+        res = sim.run(jobs)
+        print(f"   {name:9s} avg JCT {res.avg_jct/3600:5.2f} h   "
+              f"makespan {res.makespan/3600:5.2f} h   "
+              f"reconfigs {res.n_reconfig}")
+
+
+if __name__ == "__main__":
+    main()

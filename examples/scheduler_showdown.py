@@ -1,0 +1,49 @@
+"""Scheduler showdown: replay one trace under all seven policies and print
+the paper-style comparison table, plus a live view of Rubick reconfiguring
+a single job as the cluster drains (Fig 7 style).
+
+Run:  PYTHONPATH=src python examples/scheduler_showdown.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import baselines, paper_models, trace
+from repro.core.cluster import Cluster
+from repro.core.oracle import AnalyticOracle, profiling_samples
+from repro.core.perfmodel import fit
+from repro.core.sensitivity import SensitivityCurve
+from repro.core.simulator import Simulator
+
+
+def main() -> None:
+    print("== Fig 7-style: one LLaMA-2-7B job under shrinking resources ==")
+    prof = paper_models.profile("llama2-7b")
+    oracle = AnalyticOracle()
+    k = fit(prof, profiling_samples(prof, oracle))
+    curve = SensitivityCurve(prof, k, max_gpus=32)
+    for g, label in [(32, "4 nodes × 8"), (16, "4 nodes × 4"),
+                     (4, "1 node × 4"), (1, "1 GPU"), (1, "1 GPU, 2× CPU")]:
+        cpus = 24 if label.endswith("2× CPU") else 12 * g
+        pt = curve.best_plan_at_most(g, cpus)
+        print(f"  {label:14s} -> {pt.plan.strategy if pt.plan else 'OOM':26s}"
+              f" {pt.throughput:8.2f} samples/s")
+
+    print("\n== Table 4-style: trace replay under every scheduler ==")
+    jobs = trace.generate(n_jobs=40, hours=3, seed=1, load_scale=2.0)
+    cluster = Cluster(n_nodes=8)
+    cache: dict = {}
+    print(f"  {'scheduler':10s} {'avgJCT(h)':>10s} {'p99(h)':>8s} "
+          f"{'makespan(h)':>12s} {'reconfigs':>10s}")
+    for name in ("rubick", "rubick-e", "rubick-r", "rubick-n",
+                 "sia", "synergy", "antman"):
+        sched = baselines.ALL[name]()
+        res = Simulator(cluster, sched, fit_cache=cache).run(jobs)
+        print(f"  {name:10s} {res.avg_jct/3600:10.2f} {res.p99_jct/3600:8.2f}"
+              f" {res.makespan/3600:12.2f} {res.n_reconfig:10d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""repro — Rubick (reconfigurable-job cluster scheduling) on JAX/TPU.
+
+Public surface:
+    repro.configs          — 10 assigned architectures (+2 paper models)
+    repro.models           — build(cfg) -> Model (loss/prefill/decode)
+    repro.parallel         — ExecutionPlan + plan->GSPMD sharding compiler
+    repro.core             — Rubick: perfmodel, scheduler, simulator, roofline
+    repro.train / serve    — pjit train step, optimizers, checkpoints, engine
+    repro.kernels          — Pallas TPU kernels (+ jnp oracles)
+    repro.launch           — mesh / dryrun / train entry points
+"""
+
+__version__ = "1.0.0"

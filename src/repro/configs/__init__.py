@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    ARCHS,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get,
+    get_reduced,
+    list_archs,
+    shape_applicable,
+)
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "get",
+    "get_reduced",
+    "list_archs",
+    "shape_applicable",
+]

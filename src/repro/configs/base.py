@@ -1,0 +1,206 @@
+"""Configuration system for repro.
+
+Two config families:
+  * :class:`ModelConfig` — full architectural description of a model.  One
+    instance per assigned architecture lives in ``repro/configs/<id>.py``.
+  * :class:`ShapeConfig` — an (input-shape × step-kind) cell from the
+    assignment: ``train_4k`` / ``prefill_32k`` / ``decode_32k`` / ``long_500k``.
+
+Every architecture config also carries a ``reduced()`` constructor used by the
+CPU smoke tests: same family / same code paths, tiny dims.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    act: str = "swiglu"            # swiglu | geglu | gelu
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # --- Mixture of Experts -------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0              # per-expert FFN width
+    n_dense_layers: int = 0        # leading dense layers before MoE layers
+    capacity_factor: float = 1.25
+
+    # --- Multi-head Latent Attention (DeepSeek-V3) --------------------------
+    mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    mtp_depth: int = 0             # multi-token-prediction extra depth
+
+    # --- SSM (Mamba-2 / SSD) -------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # --- Hybrid (Zamba2): shared attention block every N ssm layers ----------
+    attn_every: int = 0
+
+    # --- RWKV-6 ---------------------------------------------------------------
+    rwkv: bool = False
+    rwkv_head_dim: int = 64
+    rwkv_lora_decay: int = 64
+    rwkv_lora_mix: int = 32
+
+    # --- Encoder-decoder ------------------------------------------------------
+    enc_layers: int = 0            # >0 => encoder-decoder; n_layers = decoder
+
+    # --- Modality frontend stubs ---------------------------------------------
+    frontend: str = "none"         # none | vision | audio
+    n_patches: int = 0             # vision stub: image patch embeddings
+    n_frames: int = 0              # audio stub: precomputed frame embeddings
+
+    # --- Attention execution knobs -------------------------------------------
+    attn_chunk_q: int = 512
+    attn_chunk_k: int = 1024
+    sliding_window: int = 0        # 0 => full attention
+    max_seq: int = 540_672
+
+    # --- Misc ------------------------------------------------------------------
+    dtype: str = "bfloat16"
+    source: str = ""               # citation tag from the assignment table
+
+    # ----------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.enc_layers > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if long-context (500k) decode is supported (SSM/hybrid)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def n_moe_layers(self) -> int:
+        if self.n_experts == 0:
+            return 0
+        return self.n_layers - self.n_dense_layers
+
+    def param_count(self) -> int:
+        """Analytic total parameter count (embedding included)."""
+        from repro.core import costs
+
+        return costs.param_count(self)
+
+    def active_param_count(self) -> int:
+        from repro.core import costs
+
+        return costs.active_param_count(self)
+
+    def with_(self, **kw: Any) -> "ModelConfig":
+        return replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned, shared by all 10 LM-family architectures)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether an (arch × shape) cell is runnable, and why not if skipped.
+
+    Per assignment: ``long_500k`` needs sub-quadratic attention — skipped for
+    pure full-attention archs; encoder-only archs would skip decode (none of
+    the assigned archs are encoder-only).
+    """
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, (
+            f"{cfg.name} is full-attention (family={cfg.family}); 500k-token "
+            "decode requires sub-quadratic attention (see DESIGN.md)"
+        )
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCHS = (
+    "zamba2-7b",
+    "phi-3-vision-4.2b",
+    "gemma-2b",
+    "starcoder2-3b",
+    "qwen2-72b",
+    "phi3-medium-14b",
+    "moonshot-v1-16b-a3b",
+    "deepseek-v3-671b",
+    "rwkv6-1.6b",
+    "seamless-m4t-large-v2",
+    # Paper-native models used by the Rubick benchmarks (Table 2):
+    "gpt2-1.5b",
+    "llama2-7b",
+)
+
+_MODULE_FOR = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+
+
+def get(name: str) -> ModelConfig:
+    """Load the full ModelConfig for an architecture id."""
+    if name not in _MODULE_FOR:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULE_FOR)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR[name]}")
+    return mod.CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR[name]}")
+    return mod.reduced()
+
+
+def list_archs() -> tuple[str, ...]:
+    return ARCHS

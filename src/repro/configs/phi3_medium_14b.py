@@ -1,0 +1,35 @@
+"""Phi3-medium-14B [dense] — RoPE SwiGLU GQA.
+
+40L d_model=5120 40H (GQA kv=10) d_ff=17920 vocab=100352.
+[arXiv:2404.14219; unverified]
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-medium-14b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=10,
+    d_ff=17920,
+    vocab_size=100352,
+    act="swiglu",
+    source="arXiv:2404.14219; unverified",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.with_(
+        n_layers=3,
+        d_model=80,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=20,
+        d_ff=160,
+        vocab_size=256,
+        attn_chunk_q=16,
+        attn_chunk_k=32,
+        max_seq=128,
+    )

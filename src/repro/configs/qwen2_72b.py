@@ -1,0 +1,35 @@
+"""Qwen2-72B [dense] — GQA with QKV bias.
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064. [arXiv:2407.10671; hf]
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-72b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    act="swiglu",
+    qkv_bias=True,
+    rope_theta=1e6,
+    source="arXiv:2407.10671; hf",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.with_(
+        n_layers=3,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab_size=256,
+        attn_chunk_q=16,
+        attn_chunk_k=32,
+        max_seq=128,
+    )

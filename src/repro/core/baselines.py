@@ -1,0 +1,193 @@
+"""Baseline schedulers (paper Sec 7.3) + the Rubick-E/R/N ablations.
+
+  Sia-like     — GPU elasticity along the DP dimension only; no plan
+                 switching; model of goodput limited to DP jobs; 3D jobs
+                 fall back to a feasible static plan with scaling disabled.
+  Synergy-like — fixed GPU counts as requested; tunes CPU/mem allocation
+                 per sensitivity; no execution-plan awareness.
+  AntMan-like  — multi-tenant guaranteed/best-effort with EXACT resource
+                 guarantees (vs Rubick's performance guarantees); no
+                 reconfiguration.
+  Rubick-E     — plans reconfigurable, resources fixed at request.
+  Rubick-R     — resources reallocatable, plan family fixed (DP scaling).
+  Rubick-N     — neither (policy skeleton only).
+
+All share the Rubick scheduler machinery with switches off, plus small
+policy overrides, so comparisons isolate the reconfigurability dimensions.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import replace
+
+from repro.core import memory
+from repro.core.cluster import Cluster, JobState, used_per_node
+from repro.core.perfmodel import Alloc, Env, predict_throughput
+from repro.core.scheduler import RubickScheduler, SchedulerConfig
+
+
+def make_rubick(env=None, quotas=None) -> RubickScheduler:
+    s = RubickScheduler(env, SchedulerConfig(), quotas)
+    s.name = "rubick"
+    return s
+
+
+def make_rubick_e(env=None, quotas=None) -> RubickScheduler:
+    s = RubickScheduler(env, SchedulerConfig(reallocate_resources=False),
+                        quotas)
+    s.name = "rubick-e"
+    return s
+
+
+def make_rubick_r(env=None, quotas=None) -> RubickScheduler:
+    s = RubickScheduler(env, SchedulerConfig(reconfigure_plans=False),
+                        quotas)
+    s.name = "rubick-r"
+    return s
+
+
+def make_rubick_n(env=None, quotas=None) -> RubickScheduler:
+    s = RubickScheduler(env, SchedulerConfig(reconfigure_plans=False,
+                                             reallocate_resources=False),
+                        quotas)
+    s.name = "rubick-n"
+    return s
+
+
+class _FixedPlanScheduler(RubickScheduler):
+    """FIFO gang scheduler: requested resources, original plan, no changes."""
+    name = "fifo"
+
+    def __init__(self, env=None, quotas=None):
+        super().__init__(env, SchedulerConfig(reconfigure_plans=False,
+                                              reallocate_resources=False),
+                         quotas)
+
+    def schedule(self, jobs, cluster, now=0.0):
+        active = [j for j in jobs if j.status != "done"]
+        for js in active:
+            self._ensure_min_res(js, cluster)
+        queued = sorted([j for j in active if j.status == "queued"],
+                        key=lambda j: j.job.submit)
+        for js in queued:
+            if not self._quota_ok(js, jobs):
+                continue
+            self._gang_place(js, active, cluster, now)
+
+    def _gang_place(self, js: JobState, active, cluster, now) -> bool:
+        need = js.job.req_gpus
+        used = used_per_node([j for j in active if j is not js])
+        placement = {}
+        got = 0
+        for node in cluster.nodes:
+            fg, fc, fm = node.free(used)
+            take = min(fg, need - got)
+            if take > 0:
+                placement[node.id] = (take, min(fc, self.cfg.cpus_per_gpu
+                                                * take), 0.0)
+                got += take
+            if got >= need:
+                break
+        if got < need:
+            return False
+        plan = self._job_plan(js, got, cluster)
+        if plan is None:
+            return False
+        js.placement = placement
+        js.alloc = Alloc(got, sum(c for _, c, _ in placement.values()),
+                         gpus_per_node=js.gpus_per_node_tuple())
+        js.plan = plan
+        js.status = "running"
+        js.start_time = now if js.start_time is None else js.start_time
+        return True
+
+    def _job_plan(self, js: JobState, gpus: int, cluster: Cluster):
+        plan = js.job.orig_plan
+        if plan.n_gpus > gpus:
+            return None
+        if not memory.feasible(js.job.profile, plan,
+                               Alloc(gpus, self.cfg.cpus_per_gpu * gpus),
+                               self.env):
+            # fall back to any feasible plan (jobs must be runnable)
+            pt = self.curve(js, cluster).best_plan_at_most(gpus)
+            return pt.plan
+        return plan
+
+
+class SynergyLike(_FixedPlanScheduler):
+    """Fixed GPUs (as requested) + sensitivity-aware CPU allocation [33]."""
+    name = "synergy"
+
+    def _gang_place(self, js, active, cluster, now):
+        ok = super()._gang_place(js, active, cluster, now)
+        if not ok:
+            return False
+        # CPU-sensitivity tuning: offload-style jobs get extra CPUs
+        curve = self.curve(js, cluster)
+        g = js.total_gpus
+        if curve.slope_cpu(g, js.total_cpus) > 0:
+            used = used_per_node([j for j in active if j is not js])
+            for nid in list(js.placement):
+                node = cluster.nodes[nid]
+                fg, fc, fm = node.free(used)
+                gg, cc, mm = js.placement[nid]
+                extra = min(fc - cc, 2 * self.cfg.cpus_per_gpu * gg)
+                if extra > 0:
+                    js.placement[nid] = (gg, cc + extra, mm)
+            js.alloc = Alloc(js.total_gpus, js.total_cpus,
+                             gpus_per_node=js.gpus_per_node_tuple())
+        return True
+
+
+class SiaLike(RubickScheduler):
+    """DP-dimension GPU elasticity only (no plan switching) [18]."""
+    name = "sia"
+
+    def __init__(self, env=None, quotas=None):
+        super().__init__(env, SchedulerConfig(reconfigure_plans=False),
+                         quotas)
+
+
+class AntManLike(_FixedPlanScheduler):
+    """Exact resource guarantees for guaranteed jobs; best-effort jobs run
+    opportunistically and are preempted on guaranteed arrivals [56]."""
+    name = "antman"
+
+    def schedule(self, jobs, cluster, now=0.0):
+        active = [j for j in jobs if j.status != "done"]
+        for js in active:
+            self._ensure_min_res(js, cluster)
+        queued_g = sorted([j for j in active if j.status == "queued"
+                           and j.job.guaranteed], key=lambda j: j.job.submit)
+        for js in queued_g:
+            if not self._quota_ok(js, jobs):
+                continue
+            if not self._gang_place(js, active, cluster, now):
+                # preempt best-effort jobs to honor the resource guarantee
+                be = [j for j in active if j.status == "running"
+                      and not j.job.guaranteed]
+                for victim in be:
+                    victim.status = "queued"
+                    victim.placement = {}
+                    victim.plan = None
+                    victim.alloc = None
+                    victim.n_reconfig += 1
+                    if self._gang_place(js, active, cluster, now):
+                        break
+        queued_be = sorted([j for j in active if j.status == "queued"
+                            and not j.job.guaranteed],
+                           key=lambda j: j.job.submit)
+        for js in queued_be:
+            self._gang_place(js, active, cluster, now)
+
+
+ALL = {
+    "rubick": make_rubick,
+    "rubick-e": make_rubick_e,
+    "rubick-r": make_rubick_r,
+    "rubick-n": make_rubick_n,
+    "sia": lambda env=None, quotas=None: SiaLike(env, quotas),
+    "synergy": lambda env=None, quotas=None: SynergyLike(env, quotas),
+    "antman": lambda env=None, quotas=None: AntManLike(env, quotas),
+}

@@ -1,0 +1,115 @@
+"""Cluster / job state shared by the Rubick scheduler, baselines, and the
+discrete-time simulator (paper Sec 5 + 7.3)."""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+
+from repro.core.perfmodel import Alloc, Env, FitParams, ModelProfile
+from repro.parallel.plan import ExecutionPlan
+
+
+@dataclass
+class Node:
+    id: int
+    gpus: int = 8
+    cpus: int = 96
+    mem: float = 1600e9
+
+    def free(self, used: dict[int, tuple[int, int, float]]) -> tuple[int, int, float]:
+        g = c = 0
+        m = 0.0
+        if self.id in used:
+            g, c, m = used[self.id]
+        return self.gpus - g, self.cpus - c, self.mem - m
+
+
+@dataclass
+class Cluster:
+    n_nodes: int = 8
+    gpus_per_node: int = 8
+    cpus_per_node: int = 96
+    mem_per_node: float = 1600e9
+
+    def __post_init__(self):
+        self.nodes = [Node(i, self.gpus_per_node, self.cpus_per_node,
+                           self.mem_per_node) for i in range(self.n_nodes)]
+
+    @property
+    def total_gpus(self) -> int:
+        return self.n_nodes * self.gpus_per_node
+
+
+@dataclass
+class Job:
+    """A training job as submitted (paper Sec 2.1: gang request +
+    user-chosen static plan)."""
+    name: str
+    profile: ModelProfile
+    submit: float
+    target_iters: float                  # work in iterations of batch b
+    req_gpus: int
+    req_cpus: int
+    orig_plan: ExecutionPlan
+    guaranteed: bool = True
+    tenant: str = "A"
+
+
+# placement: node id -> (gpus, cpus, mem)
+Placement = dict[int, tuple[int, int, float]]
+
+
+@dataclass
+class JobState:
+    job: Job
+    status: str = "queued"               # queued | running | done
+    plan: ExecutionPlan | None = None
+    alloc: Alloc | None = None
+    placement: Placement = field(default_factory=dict)
+    fitted: FitParams | None = None
+    progress: float = 0.0                # iterations completed
+    n_reconfig: int = 0
+    start_time: float | None = None
+    finish_time: float | None = None
+    run_time: float = 0.0                # aggregated running seconds
+    min_res: tuple[int, int] | None = None   # (gpus, cpus) minRes
+    baseline_perf: float = 0.0           # samples/s with requested+orig plan
+
+    @property
+    def total_gpus(self) -> int:
+        return sum(g for g, _, _ in self.placement.values())
+
+    @property
+    def total_cpus(self) -> int:
+        return sum(c for _, c, _ in self.placement.values())
+
+    def gpus_per_node_tuple(self) -> tuple[int, ...]:
+        return tuple(sorted((g for g, _, _ in self.placement.values()
+                             if g > 0), reverse=True))
+
+    def jct(self) -> float | None:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.job.submit
+
+
+def used_per_node(jobs: list[JobState]) -> dict[int, tuple[int, int, float]]:
+    used: dict[int, list[float]] = {}
+    for js in jobs:
+        for nid, (g, c, m) in js.placement.items():
+            u = used.setdefault(nid, [0, 0, 0.0])
+            u[0] += g
+            u[1] += c
+            u[2] += m
+    return {k: (int(v[0]), int(v[1]), v[2]) for k, v in used.items()}
+
+
+def check_capacity(cluster: Cluster, jobs: list[JobState]) -> bool:
+    """Invariant: no node over-allocated (property-tested)."""
+    used = used_per_node(jobs)
+    for node in cluster.nodes:
+        g, c, m = used.get(node.id, (0, 0, 0.0))
+        if g > node.gpus or c > node.cpus or m > node.mem + 1e-3:
+            return False
+    return True

@@ -1,0 +1,459 @@
+"""HLO-text cost analyzer with loop-trip-count multiplication.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE and reports
+per-device numbers — useless for scanned layer stacks (every model here
+scans its layers).  This module walks the optimized HLO call graph instead:
+
+  * dots: 2 × result_elements × contraction_size
+  * reduces / elementwise: ~1 flop per element (matmuls dominate anyway)
+  * while loops: body cost × known_trip_count (from backend_config)
+  * fusions / calls: callee cost inlined
+  * conditionals: max over branches (upper bound; models avoid conds in hot
+    loops so this is exact in practice)
+  * collectives: per-kind bytes with the same loop multipliers — an
+    all-reduce inside a GA loop counts ga_steps times.
+
+All numbers are per-device (SPMD module); multiply by chip count for global.
+Also supports attributing dot FLOPs by ``metadata op_name`` regex — used by
+the §Perf hillclimbing loop to find where the FLOPs go.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-_]+)\s*\(.*\)\s*->\s*.*\s*\{")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-_]+)\s*=\s*(.*)$")
+_SIMPLE_TYPE_RE = re.compile(r"[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?")
+_OP_NAME_RE = re.compile(r"\s*([\w\-]+)\(")
+
+
+def _parse_instr_rest(rest: str):
+    """Parse '<type> <op>(<args>)<attrs>' handling nested tuple types."""
+    rest = rest.strip()
+    if rest.startswith("("):
+        depth = 0
+        type_str, tail = None, ""
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str, tail = rest[:i + 1], rest[i + 1:]
+                    break
+        if type_str is None:
+            return None
+    else:
+        m = _SIMPLE_TYPE_RE.match(rest)
+        if not m:
+            return None
+        type_str, tail = m.group(0), rest[m.end():]
+    m2 = _OP_NAME_RE.match(tail)
+    if not m2:
+        return None
+    return type_str, m2.group(1), tail[m2.end():]
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "sign",
+    "floor", "ceil", "round-nearest-afz", "logistic", "cosine", "sine",
+    "expm1", "log1p", "atan2", "remainder", "select", "clamp", "compare",
+    "and", "or", "xor", "not", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "erf",
+}
+_FREE = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "reshape", "transpose", "broadcast", "slice", "concatenate", "reverse",
+    "copy", "copy-start", "copy-done", "convert", "iota", "pad",
+    "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+    "after-all", "custom-call", "partition-id", "replica-id", "rng",
+    "rng-bit-generator", "optimization-barrier", "get-dimension-size",
+}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in shape_dims(type_str):
+        total += math.prod(dims) * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> float:
+    total = 0.0
+    for _, dims in shape_dims(type_str):
+        total += math.prod(dims)
+    return total
+
+
+def _split_args(s: str) -> tuple[list[str], str]:
+    """Split 'a, b, c), attrs...' into operand list and trailing attrs."""
+    depth, cur, args = 0, [], []
+    for i, ch in enumerate(s):
+        if ch == "(" or ch == "{" or ch == "[":
+            depth += 1
+        elif ch == "}" or ch == "]":
+            depth -= 1
+        elif ch == ")":
+            if depth == 0:
+                args.append("".join(cur).strip())
+                return [a for a in args if a], s[i + 1:]
+            depth -= 1
+        elif ch == "," and depth == 0:
+            args.append("".join(cur).strip())
+            cur = []
+            continue
+        cur.append(ch)
+    return [a for a in args if a], ""
+
+
+@dataclass
+class _Instr:
+    name: str
+    op: str
+    type_str: str
+    operands: list[str]
+    attrs: str
+    meta: str = ""
+
+
+@dataclass
+class _Comp:
+    name: str
+    instrs: list[_Instr] = field(default_factory=list)
+    types: dict = field(default_factory=dict)
+    root: str = ""
+    by_name: dict = field(default_factory=dict)
+
+
+def parse_module(text: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    entry = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if line.rstrip().endswith("{") and ("->" in line):
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = _Comp(m.group(1))
+                comps[cur.name] = cur
+                if line.strip().startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, rest = mi.group(1), mi.group(2)
+        parsed = _parse_instr_rest(rest)
+        if parsed is None:
+            continue
+        type_str, op, args_rest = parsed
+        operands, attrs = _split_args(args_rest)
+        meta = ""
+        mm = re.search(r'op_name="([^"]*)"', attrs)
+        if mm:
+            meta = mm.group(1)
+        ins = _Instr(name, op, type_str, operands, attrs, meta)
+        cur.instrs.append(ins)
+        cur.types[name] = type_str
+        cur.by_name[name] = ins
+        if re.match(r"^\s*ROOT\s", line):
+            cur.root = name
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _ref(arg: str) -> str | None:
+    arg = arg.strip()
+    if arg.startswith("%"):
+        return arg[1:].split(" ")[0]
+    # typed ref like 'f32[8]{0} %name'
+    m = re.search(r"%([\w\.\-_]+)", arg)
+    return m.group(1) if m else None
+
+
+def _trip_count(attrs: str) -> float:
+    m = re.search(r'known_trip_count[^0-9]*?(\d+)', attrs)
+    return float(m.group(1)) if m else 1.0
+
+
+def _dot_flops(ins: _Instr, comp: _Comp) -> float:
+    res = shape_elems(ins.type_str)
+    contraction = 1.0
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    if m and ins.operands:
+        lhs = _ref(ins.operands[0])
+        lhs_t = comp.types.get(lhs or "", "")
+        dims_list = shape_dims(lhs_t)
+        if dims_list:
+            dims = dims_list[0][1]
+            for d in m.group(1).split(","):
+                if d and int(d) < len(dims):
+                    contraction *= dims[int(d)]
+    return 2.0 * res * contraction
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    coll: dict = field(default_factory=lambda: defaultdict(float))
+    dot_by_tag: dict = field(default_factory=lambda: defaultdict(float))
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.transcendentals += other.transcendentals
+        for k, v in other.coll.items():
+            self.coll[k] += v
+        for k, v in other.dot_by_tag.items():
+            self.dot_by_tag[k] += v
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f, self.transcendentals * f,
+                    defaultdict(float, {k: v * f for k, v in self.coll.items()}),
+                    defaultdict(float,
+                                {k: v * f for k, v in self.dot_by_tag.items()}))
+
+
+def _coll_bytes(ins: _Instr, comp: _Comp) -> float:
+    res = shape_bytes(ins.type_str)
+    if ins.op.startswith("all-reduce"):
+        return 2.0 * res
+    if ins.op.startswith("reduce-scatter"):
+        op0 = _ref(ins.operands[0]) if ins.operands else None
+        return shape_bytes(comp.types.get(op0 or "", "")) or res
+    return res
+
+
+class HloCostAnalyzer:
+    """Memoized call-graph cost resolution with dot-FLOP attribution."""
+
+    def __init__(self, text: str, tag_fn=None):
+        self.comps = parse_module(text)
+        self.tag_fn = tag_fn or (lambda meta: "other")
+        self._memo: dict[str, Cost] = {}
+
+    def total(self) -> Cost:
+        if "__entry__" not in self.comps:
+            return Cost()
+        return self._cost("__entry__")
+
+    def _cost(self, name: str, in_fusion: bool = False) -> Cost:
+        """Cost of one computation.  ``in_fusion``: we were reached through a
+        fusion op — internal ops contribute FLOPs but no memory traffic
+        (only the fusion boundary I/O counts, charged at the call site)."""
+        key = (name, in_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = Cost()            # cycle guard
+        comp = self.comps.get(name)
+        if comp is None:
+            return self._memo[key]
+        total = Cost()
+        for ins in comp.instrs:
+            op = ins.op
+            base = op.replace("-start", "").replace("-done", "")
+            if op.endswith("-done"):
+                continue
+            if base in COLLECTIVES:
+                total.coll[base] += _coll_bytes(ins, comp)
+                if not in_fusion:
+                    total.bytes += shape_bytes(ins.type_str)
+                continue
+            if op == "while":
+                tc = _trip_count(ins.attrs)
+                body = re.search(r"body=%?([\w\.\-_]+)", ins.attrs)
+                cond = re.search(r"condition=%?([\w\.\-_]+)", ins.attrs)
+                if body:
+                    total += self._cost(body.group(1), in_fusion).scaled(tc)
+                if cond:
+                    total += self._cost(cond.group(1), in_fusion).scaled(tc + 1)
+                continue
+            if op == "fusion" or op == "call" or op == "map":
+                m = re.search(r"(?:calls|to_apply)=%?([\w\.\-_]+)", ins.attrs)
+                callee = None
+                if m:
+                    total += self._cost(
+                        m.group(1), in_fusion or op == "fusion")
+                    callee = self.comps.get(m.group(1))
+                if not in_fusion:
+                    total.bytes += self._fusion_io_bytes(ins, comp, callee)
+                continue
+            if op == "conditional":
+                branches = re.findall(
+                    r"(?:true_computation|false_computation|branch_computations)"
+                    r"=\{?%?([\w\.\-_,%\s]+)\}?", ins.attrs)
+                names = []
+                for b in branches:
+                    names += [x.strip().lstrip("%") for x in b.split(",")]
+                if names:
+                    costs = [self._cost(n, in_fusion)
+                             for n in names if n in self.comps]
+                    if costs:
+                        best = max(costs, key=lambda c: c.flops + c.bytes)
+                        total += best
+                continue
+            if op == "dot":
+                f = _dot_flops(ins, comp)
+                total.flops += f
+                total.dot_by_tag[self.tag_fn(ins.meta)] += f
+                if not in_fusion:
+                    total.bytes += self._io_bytes(ins, comp)
+                continue
+            if op == "convolution":
+                # approx: 2 × out × (kernel elems)
+                kern = _ref(ins.operands[1]) if len(ins.operands) > 1 else None
+                kt = comp.types.get(kern or "", "")
+                total.flops += 2.0 * shape_elems(ins.type_str) * \
+                    max(shape_elems(kt), 1.0)
+                if not in_fusion:
+                    total.bytes += self._io_bytes(ins, comp)
+                continue
+            if op.startswith("reduce"):
+                inp = _ref(ins.operands[0]) if ins.operands else None
+                total.flops += shape_elems(comp.types.get(inp or "", ""))
+                if not in_fusion:
+                    total.bytes += self._io_bytes(ins, comp)
+                continue
+            if op == "sort":
+                n = shape_elems(ins.type_str)
+                total.flops += n * max(math.log2(max(n, 2.0)), 1.0)
+                if not in_fusion:
+                    total.bytes += self._io_bytes(ins, comp)
+                continue
+            if op in _ELEMENTWISE:
+                e = shape_elems(ins.type_str)
+                total.flops += e
+                if op in ("exponential", "log", "tanh", "rsqrt", "sqrt",
+                          "logistic", "power", "erf"):
+                    total.transcendentals += e
+                if not in_fusion:
+                    total.bytes += self._io_bytes(ins, comp)
+                continue
+            if op in _FREE:
+                continue
+            # unknown op: count io bytes only
+            if not in_fusion:
+                total.bytes += self._io_bytes(ins, comp)
+        self._memo[key] = total
+        return total
+
+    def _io_bytes(self, ins: _Instr, comp: _Comp) -> float:
+        b = shape_bytes(ins.type_str)
+        for a in ins.operands:
+            r = _ref(a)
+            if r and r in comp.types:
+                b += shape_bytes(comp.types[r])
+        return b
+
+    def _fusion_io_bytes(self, ins: _Instr, comp: _Comp,
+                         callee: _Comp | None) -> float:
+        """Fusion bytes: operands + result, but parameters used only through
+        (dynamic-)slice/gather count their SLICE sizes, and a root
+        dynamic-update-slice counts its update size (XLA updates in place).
+        Without this, scanned-layer grad buffers (L, …) would be charged in
+        full every loop iteration — a ~L× overcount of the memory term."""
+        if callee is None:
+            return self._io_bytes(ins, comp)
+        # --- result side ---
+        def res_bytes(name: str) -> float:
+            r = callee.by_name.get(name)
+            if r is None:
+                return 0.0
+            if r.op == "dynamic-update-slice":
+                upd = _ref(r.operands[1]) if len(r.operands) > 1 else None
+                return shape_bytes(callee.types.get(upd or "", "")) or \
+                    shape_bytes(r.type_str)
+            if r.op == "tuple":
+                return sum(res_bytes(_ref(o) or "") for o in r.operands)
+            return shape_bytes(r.type_str)
+        b = res_bytes(callee.root) if callee.root else shape_bytes(ins.type_str)
+        # --- operand side ---
+        params: dict[int, str] = {}
+        for ci in callee.instrs:
+            if ci.op == "parameter" and ci.operands:
+                try:
+                    params[int(ci.operands[0])] = ci.name
+                except ValueError:
+                    pass
+        uses: dict[str, list[_Instr]] = defaultdict(list)
+        for ci in callee.instrs:
+            for o in ci.operands:
+                r = _ref(o)
+                if r:
+                    uses[r].append(ci)
+        for i, a in enumerate(ins.operands):
+            r = _ref(a)
+            full = shape_bytes(comp.types.get(r or "", ""))
+            pname = params.get(i)
+            if pname is None or not uses.get(pname):
+                b += full
+                continue
+            pu = uses[pname]
+            sliced_ok = all(
+                u.op in ("dynamic-slice", "slice", "gather")
+                or (u.op == "dynamic-update-slice"
+                    and _ref(u.operands[0]) == pname)
+                for u in pu)
+            if sliced_ok:
+                for u in pu:
+                    if u.op == "dynamic-update-slice":
+                        upd = _ref(u.operands[1]) if len(u.operands) > 1 else None
+                        b += shape_bytes(callee.types.get(upd or "", ""))
+                    else:
+                        b += shape_bytes(u.type_str)
+            else:
+                b += full
+        return b
+
+
+def default_tag(meta: str) -> str:
+    """Coarse attribution of dot FLOPs from jaxpr op_name metadata."""
+    m = meta.lower()
+    for tag, pats in (
+        ("attention", ("attn", "attention", "bkgqs", "bqkgd", "mla")),
+        ("moe", ("moe", "ecf", "ecd", "router", "expert")),
+        ("ssm", ("ssd", "mamba", "wkv", "bhpn", "bihp")),
+        ("vocab", ("logits", "cross_entropy", "logsumexp", "chunk_loss",
+                   "embed")),
+        ("optimizer", ("opt_update", "adam")),
+        ("backward", ("transpose(jvp", "vjp")),
+    ):
+        if any(p in m for p in pats):
+            return tag
+    return "other"
+
+
+def analyze_text(text: str, tag_fn=default_tag) -> Cost:
+    return HloCostAnalyzer(text, tag_fn).total()

@@ -1,0 +1,91 @@
+"""Per-GPU / per-host memory estimation (paper: AllocMem + the OOM
+feasibility inside the minRes search of Algorithm 1).
+
+Mixed-precision accounting (DeepSpeed/Megatron convention):
+  weights 2 B/param, grads 2, optimizer states (fp32 master + Adam m,v) 12
+  → 16 B/param total, partitioned per strategy:
+
+    plain DP      : 16·P / (t·p)
+    ZeRO-DP (z≥1) : (2+2)·P/(t·p) + 12·P/(d·t·p)       (ZeRO-2 by default)
+    FSDP (z=3)    : 16·P / (d·t·p)
+    ZeRO-Offload  : GPU keeps 2·P/d (+grad buckets); 12·P/d + 2·P/d on host
+
+Activations: c_act·b_micro·s·h·l/(t·p) bytes with c_act ≈ 34 half-precision
+copies per transformer layer; gradient checkpointing keeps layer boundaries
+(2 bytes) + one live layer.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.perfmodel import Alloc, Env, ModelProfile
+from repro.parallel.plan import ExecutionPlan
+
+C_ACT = 34.0          # bytes/token/hidden/layer without GC (bf16 copies)
+C_ACT_GC = 2.0        # checkpointed boundaries
+FRAMEWORK_OVERHEAD = 4e9
+
+
+@dataclass(frozen=True)
+class MemEstimate:
+    gpu_bytes: float
+    host_bytes: float
+    cpu_needed: int
+
+    def fits(self, env: Env, cpus: int, host_mem: float) -> bool:
+        return (self.gpu_bytes <= env.gpu_mem
+                and self.host_bytes <= host_mem
+                and self.cpu_needed <= cpus)
+
+
+def estimate(profile: ModelProfile, plan: ExecutionPlan, alloc: Alloc,
+             env: Env | None = None) -> MemEstimate:
+    env = env or Env()
+    d, t, p, a = plan.dp, plan.tp, plan.pp, max(plan.ga_steps, 1)
+    P = profile.P
+    shard = t * p
+
+    if plan.offload:
+        weights = 2.0 * P / (d * shard)
+        grads = 2.0 * P / (d * shard)
+        opt = 0.0
+        host = (12.0 + 2.0) * P / d
+        cpu_needed = max(1, alloc.gpus // max(d, 1))
+    else:
+        host = 1e9
+        cpu_needed = 1
+        if plan.zero_stage == 3:
+            weights = 2.0 * P / (d * shard)
+            grads = 2.0 * P / (d * shard)
+            opt = 12.0 * P / (d * shard)
+        elif plan.zero_stage >= 1:
+            weights = 2.0 * P / shard
+            grads = 2.0 * P / (d * shard)
+            opt = 12.0 * P / (d * shard)
+        else:
+            weights = 2.0 * P / shard
+            grads = 2.0 * P / shard
+            opt = 12.0 * P / shard
+
+    b_micro = profile.b / max(d * a, 1)
+    c_act = C_ACT_GC if plan.gc else C_ACT
+    act = c_act * b_micro * profile.s * profile.h * profile.l / shard
+    if plan.gc:
+        act += C_ACT * b_micro * profile.s * profile.h / shard  # live layer
+
+    gpu = weights + grads + opt + act + FRAMEWORK_OVERHEAD
+    return MemEstimate(gpu_bytes=gpu, host_bytes=host, cpu_needed=cpu_needed)
+
+
+def feasible(profile: ModelProfile, plan: ExecutionPlan, alloc: Alloc,
+             env: Env | None = None, host_mem: float | None = None) -> bool:
+    """OOM check used by minRes / GetBestPlan (Algorithm 1 lines 19-23)."""
+    env = env or Env()
+    if plan.n_gpus > alloc.gpus:
+        return False
+    if profile.b % (plan.dp * max(plan.ga_steps, 1)):
+        return False
+    est = estimate(profile, plan, alloc, env)
+    hm = host_mem if host_mem is not None else env.host_mem
+    return est.fits(env, max(alloc.cpus, 1), hm)

@@ -1,0 +1,304 @@
+"""Rubick's resource–performance model (paper Sec 4).
+
+Predicts per-iteration time T_iter for any (execution plan × multi-resource
+allocation) of a profiled model:
+
+    T_iter = T_cc + T_oo + k_const                                   (Eq. 1)
+
+    T_cc  = T_fwd + f_overlap^{k_sync}(T_bwd, T_dp) + T_tp + T_pp    (3D)
+          = a·T_fwd + (a-1)·T_bwd + f_overlap^{k_sync}(T_bwd, T_dp)  (GA)
+    T_oo  = f^{k_off}(T_dp, T_off) + f^{k_swap}(T_opt, T_off)        (offload)
+          = T_opt                                                    (else)
+
+    f_overlap^k(x, y) = (x^k + y^k)^{1/k}   (k=1: serial; k→∞: max)  (Sec 4.3)
+
+Fittable 7-tuple (Table 1): k_bwd, k_sync, k_opt, k_opt_off, k_off, k_swap,
+k_const — fitted from ≥7 sampled (plan × resources → throughput) points by
+minimizing RMSLE, exactly as Sec 4.3 prescribes.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import costs
+from repro.parallel.plan import ExecutionPlan
+
+
+# ---------------------------------------------------------------------------
+# Environment & profile (Table 1: "Job" and "Environment" rows)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Env:
+    """Cluster environment constants (measured offline, paper Sec 6)."""
+    B_intra: float = 400e9        # NVLink, bytes/s
+    B_inter: float = 100e9        # RDMA, bytes/s
+    B_pcie: float = 32e9          # host<->device
+    gpus_per_node: int = 8
+    cpus_per_node: int = 96
+    gpu_mem: float = 80e9         # A800-80GB
+    host_mem: float = 1600e9
+    gpu_flops: float = 312e12     # A800 bf16 peak
+
+
+@dataclass(frozen=True)
+class ModelProfile:
+    """Per-model quantities the performance model needs (Table 1)."""
+    name: str
+    s: int                        # sequence length
+    h: int                        # hidden size
+    l: int                        # layers
+    P: float                      # parameter count
+    b: int                        # global batch size
+    t_fwd_unit: float             # sec per token, full fwd, one reference GPU
+    P_bytes: float = 0.0
+
+    @staticmethod
+    def from_config(cfg: ModelConfig, seq: int = 2048, batch: int = 16,
+                    env: Env | None = None, efficiency: float = 0.35
+                    ) -> "ModelProfile":
+        env = env or Env()
+        P = costs.param_count(cfg)
+        n_flops = costs.flops_param_count(cfg)
+        t_unit = 2.0 * n_flops / (env.gpu_flops * efficiency)
+        return ModelProfile(name=cfg.name, s=seq, h=cfg.d_model,
+                            l=max(cfg.n_layers, 1), P=float(P), b=batch,
+                            t_fwd_unit=t_unit, P_bytes=2.0 * P)
+
+
+@dataclass(frozen=True)
+class Alloc:
+    """A multi-resource allocation (paper: GPU, CPU, memory; bandwidth is an
+    environment property selected by placement)."""
+    gpus: int
+    cpus: int = 0                 # total CPUs across the job
+    mem: float = 0.0              # host memory bytes
+    gpus_per_node: tuple[int, ...] = ()   # placement; () = packed
+
+    def nodes(self, env: Env) -> int:
+        if self.gpus_per_node:
+            return len(self.gpus_per_node)
+        return max(1, math.ceil(self.gpus / env.gpus_per_node))
+
+    def max_gpus_on_node(self, env: Env) -> int:
+        if self.gpus_per_node:
+            return max(self.gpus_per_node)
+        return min(self.gpus, env.gpus_per_node)
+
+
+@dataclass(frozen=True)
+class FitParams:
+    """The fittable 7-tuple (Table 1)."""
+    k_bwd: float = 2.0
+    k_sync: float = 2.0
+    k_opt: float = 2e-11          # sec per param per (1/x) partition
+    k_opt_off: float = 3e-10      # CPU-side update, sec·cpu per param
+    k_off: float = 2.0
+    k_swap: float = 2.0
+    k_const: float = 0.01
+
+    def as_vector(self) -> np.ndarray:
+        return np.array([self.k_bwd, self.k_sync, self.k_opt, self.k_opt_off,
+                         self.k_off, self.k_swap, self.k_const])
+
+    @staticmethod
+    def from_vector(v) -> "FitParams":
+        return FitParams(*[float(x) for x in v])
+
+
+def f_overlap(k: float, tx: float, ty: float) -> float:
+    """(T_x^k + T_y^k)^(1/k); k=1 → sum, k→∞ → max (Sec 4.3, after [38])."""
+    if tx <= 0.0:
+        return ty
+    if ty <= 0.0:
+        return tx
+    k = max(k, 1.0)
+    lo = math.log(max(tx, ty))
+    # numerically stable log-sum-exp in the k-power domain
+    return math.exp(lo + math.log(
+        math.exp(k * (math.log(tx) - lo)) +
+        math.exp(k * (math.log(ty) - lo))) / k)
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Breakdown:
+    t_fwd: float = 0.0
+    t_bwd: float = 0.0
+    t_comm_dp: float = 0.0
+    t_comm_tp: float = 0.0
+    t_comm_pp: float = 0.0
+    t_opt: float = 0.0
+    t_off: float = 0.0
+    t_iter: float = float("inf")
+
+
+def predict_parts(profile: ModelProfile, plan: ExecutionPlan, alloc: Alloc,
+                  env: Env, k: FitParams) -> Breakdown:
+    """All T_* parts of Eq. 1 for one (plan × allocation)."""
+    d, t, p, a = plan.dp, plan.tp, plan.pp, max(plan.ga_steps, 1)
+    b, s, h, l, P = profile.b, profile.s, profile.h, profile.l, profile.P
+    g = d * t * p
+    out = Breakdown()
+    # plan may use fewer GPUs than allocated (idle spares), never more
+    if g > alloc.gpus or b % (d * a):
+        return out                                   # infeasible combination
+
+    per_node = alloc.max_gpus_on_node(env)
+    # --- T_fwd (per micro-batch, Sec 4.1) ---------------------------------
+    b_micro = b / (d * a)
+    tok = b_micro * s
+    if p > 1:
+        # PP: t_p per-stage micro-batch time, l/p layers per stage;
+        # full fwd = (m + p - 1) stage times, m micro-batches (1F1B).
+        m = a if a > 1 else p
+        t_p = profile.t_fwd_unit * (b / (d * m)) * s / (t * p)
+        t_fwd = t_p * (m + p - 1)
+        a_eff = 1                                    # GA folded into m
+    else:
+        t_fwd = profile.t_fwd_unit * tok / t
+        m = a
+        a_eff = a
+    out.t_fwd = t_fwd
+
+    # --- T_bwd -------------------------------------------------------------
+    t_bwd = k.k_bwd * t_fwd
+    if plan.gc:
+        t_bwd = t_bwd + t_fwd                        # recompute ≈ one fwd [5]
+    out.t_bwd = t_bwd
+
+    # --- T_comm (Sec 4.1) ---------------------------------------------------
+    bytes_per_param = 2.0
+    V_dp = bytes_per_param * P * 2.0 * (d - 1) / max(d * t * p, 1)
+    B_dp = env.B_intra if d * t * p <= per_node else env.B_inter
+    out.t_comm_dp = V_dp / B_dp if d > 1 else 0.0
+
+    V_tp = 8.0 * (t - 1) * b * s * h * l * bytes_per_param / max(d * t, 1)
+    B_tp = env.B_intra if t <= per_node else env.B_inter
+    out.t_comm_tp = V_tp / B_tp if t > 1 else 0.0
+
+    V_pp = 2.0 * p * b * s * h * bytes_per_param / max(d * t, 1)
+    B_pp = env.B_intra if t * p <= per_node else env.B_inter
+    out.t_comm_pp = V_pp / B_pp if p > 1 else 0.0
+
+    # --- T_opt (Sec 4.2) ----------------------------------------------------
+    if plan.offload:
+        # ZeRO-Offload: each DP rank updates P/d params on its c CPUs
+        cpus_per_rank = max(alloc.cpus / max(d, 1), 1.0)
+        out.t_opt = k.k_opt_off * P / (d * cpus_per_rank)
+    else:
+        x = t * p if (t > 1 or p > 1) else (d if plan.zero_stage >= 1 else 1)
+        out.t_opt = k.k_opt * P / x
+
+    # --- T_off --------------------------------------------------------------
+    if plan.offload:
+        out.t_off = bytes_per_param * P / (d * env.B_pcie)
+
+    # --- combine (Sec 4.3) ---------------------------------------------------
+    if a_eff > 1:
+        t_cc = a_eff * t_fwd + (a_eff - 1) * t_bwd + \
+            f_overlap(k.k_sync, t_bwd, out.t_comm_dp)
+    else:
+        t_cc = t_fwd + f_overlap(k.k_sync, t_bwd, out.t_comm_dp) \
+            + out.t_comm_tp + out.t_comm_pp
+    if plan.offload:
+        t_oo = f_overlap(k.k_off, out.t_comm_dp, out.t_off) + \
+            f_overlap(k.k_swap, out.t_opt, out.t_off)
+    else:
+        t_oo = out.t_opt
+    out.t_iter = t_cc + t_oo + k.k_const
+    return out
+
+
+def predict_titer(profile, plan, alloc, env, k) -> float:
+    return predict_parts(profile, plan, alloc, env, k).t_iter
+
+
+def predict_throughput(profile, plan, alloc, env, k) -> float:
+    """Samples/sec = b / T_iter."""
+    t = predict_titer(profile, plan, alloc, env, k)
+    return profile.b / t if t > 0 and math.isfinite(t) else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Continuous model fitting (Sec 4.3)
+# ---------------------------------------------------------------------------
+
+_BOUNDS = [(1.0, 5.0),      # k_bwd
+           (1.0, 64.0),     # k_sync
+           (1e-13, 1e-8),   # k_opt
+           (1e-12, 1e-7),   # k_opt_off
+           (1.0, 64.0),     # k_off
+           (1.0, 64.0),     # k_swap
+           (0.0, 1.0)]      # k_const
+
+
+def rmsle(pred: np.ndarray, true: np.ndarray) -> float:
+    pred = np.maximum(pred, 1e-9)
+    true = np.maximum(true, 1e-9)
+    return float(np.sqrt(np.mean(np.square(np.log(pred) - np.log(true)))))
+
+
+def fit(profile: ModelProfile, samples: list[tuple[ExecutionPlan, Alloc, float]],
+        env: Env | None = None, x0: FitParams | None = None) -> FitParams:
+    """Fit the 7-tuple to (plan, alloc, measured T_iter) samples by RMSLE.
+
+    Paper: ≥7 points, ≥3 exercising ZeRO-Offload when that strategy is in
+    the plan space; the model is refit online when prediction error exceeds
+    a threshold (handled by the scheduler loop).
+    """
+    from scipy.optimize import minimize
+
+    env = env or Env()
+    x0 = (x0 or FitParams()).as_vector()
+    lo = np.array([b[0] for b in _BOUNDS])
+    hi = np.array([b[1] for b in _BOUNDS])
+
+    def unpack(z):
+        return FitParams.from_vector(lo + (hi - lo) / (1 + np.exp(-z)))
+
+    def loss(z):
+        k = unpack(z)
+        pred = np.array([predict_titer(profile, pl, al, env, k)
+                         for pl, al, _ in samples])
+        true = np.array([t for _, _, t in samples])
+        ok = np.isfinite(pred)
+        if not ok.any():
+            return 1e6
+        return rmsle(pred[ok], true[ok])
+
+    z0 = -np.log(np.clip((hi - lo) / np.clip(x0 - lo, 1e-12, None) - 1.0,
+                         1e-9, 1e9))
+    best, best_val = z0, loss(z0)
+    for seed in range(3):
+        rng = np.random.default_rng(seed)
+        start = z0 + rng.normal(0, 1.0, size=z0.shape) * (seed > 0)
+        res = minimize(loss, start, method="Nelder-Mead",
+                       options={"maxiter": 3000, "fatol": 1e-7,
+                                "xatol": 1e-7})
+        if res.fun < best_val:
+            best, best_val = res.x, res.fun
+    return unpack(best)
+
+
+def prediction_error(profile, k: FitParams,
+                     samples: list[tuple[ExecutionPlan, Alloc, float]],
+                     env: Env | None = None) -> tuple[float, float]:
+    """(avg, max) relative T_iter error — the paper's Table 2 metric."""
+    env = env or Env()
+    errs = []
+    for pl, al, t_true in samples:
+        t_pred = predict_titer(profile, pl, al, env, k)
+        if math.isfinite(t_pred) and t_true > 0:
+            errs.append(abs(t_pred - t_true) / t_true)
+    if not errs:
+        return float("nan"), float("nan")
+    return float(np.mean(errs)), float(np.max(errs))

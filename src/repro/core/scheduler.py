@@ -1,0 +1,312 @@
+"""The Rubick scheduler — Algorithm 1 (paper Sec 5.2).
+
+Goals (Sec 5.1):
+  1. Performance guarantee: every guaranteed job performs at least as well
+     as it would with its REQUESTED resources and ORIGINAL plan (possibly
+     using fewer resources via a better plan — minRes).
+  2. Maximize cluster throughput: prefer jobs with the highest resource
+     sensitivity slopes; shrink the least-sensitive jobs above their minRes
+     to feed more sensitive ones.
+
+Reconfiguration penalty (Sec 5.2): a job is reconfigured only while
+(T − N·δ)/T stays above RECONFIG_THRESHOLD.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from repro.core import memory
+from repro.core.cluster import Cluster, Job, JobState, Placement, used_per_node
+from repro.core.perfmodel import Alloc, Env, FitParams, ModelProfile
+from repro.core.sensitivity import SensitivityCurve, min_resources
+from repro.parallel.plan import ExecutionPlan
+
+RECONFIG_THRESHOLD = 0.97
+DELTA_GPU = 1
+CPUS_PER_GPU = 12
+
+
+@dataclass
+class SchedulerConfig:
+    cpus_per_gpu: int = CPUS_PER_GPU
+    max_ga: int = 8
+    reconfig_cost_s: float = 78.0        # paper Sec 7.3: avg 78 s
+    reconfig_threshold: float = RECONFIG_THRESHOLD
+    starvation_s: float = 1800.0         # best-effort anti-starvation [12]
+    # ablation switches (Rubick-E / -R / -N variants, Sec 7.3)
+    reconfigure_plans: bool = True
+    reallocate_resources: bool = True
+
+
+class RubickScheduler:
+    name = "rubick"
+
+    def __init__(self, env: Env | None = None,
+                 cfg: SchedulerConfig | None = None,
+                 quotas: dict[str, int] | None = None):
+        self.env = env or Env()
+        self.cfg = cfg or SchedulerConfig()
+        self.quotas = quotas or {}
+        self._curves: dict[str, SensitivityCurve] = {}
+
+    # ------------------------------------------------------------------
+    def curve(self, js: JobState, cluster: Cluster) -> SensitivityCurve:
+        key = js.job.profile.name + f"@b{js.job.profile.b}"
+        if key not in self._curves:
+            self._curves[key] = SensitivityCurve(
+                js.job.profile, js.fitted, self.env,
+                max_gpus=cluster.total_gpus,
+                cpus_per_gpu=self.cfg.cpus_per_gpu, max_ga=self.cfg.max_ga)
+        return self._curves[key]
+
+    def _ensure_min_res(self, js: JobState, cluster: Cluster) -> None:
+        if js.min_res is not None:
+            return
+        curve = self.curve(js, cluster)
+        alloc = Alloc(js.job.req_gpus, js.job.req_cpus)
+        from repro.core.perfmodel import predict_throughput
+        base = predict_throughput(js.job.profile, js.job.orig_plan, alloc,
+                                  self.env, js.fitted)
+        if not math.isfinite(base):
+            base = 0.0
+        js.baseline_perf = base
+        if not js.job.guaranteed:
+            js.min_res = (0, 0)          # best-effort: minRes = 0 (Sec 5.2)
+        elif self.cfg.reconfigure_plans and self.cfg.reallocate_resources:
+            js.min_res = min_resources(curve, js.job.req_gpus,
+                                       js.job.req_cpus, base)
+        else:
+            js.min_res = (js.job.req_gpus, js.job.req_cpus)
+
+    # ------------------------------------------------------------------
+    # Algorithm 1
+    # ------------------------------------------------------------------
+    def schedule(self, jobs: list[JobState], cluster: Cluster,
+                 now: float = 0.0) -> None:
+        """Mutates job states: placement / alloc / plan / status."""
+        active = [j for j in jobs if j.status != "done"]
+        for js in active:
+            self._ensure_min_res(js, cluster)
+
+        # --- lines 2-3: privileged queued guaranteed jobs within quota ----
+        queued_g = [j for j in active if j.status == "queued"
+                    and j.job.guaranteed]
+        queued_g.sort(key=lambda j: j.job.submit)
+        for js in queued_g:
+            if not self._quota_ok(js, jobs):
+                continue
+            self._schedule_job(js, active, cluster, now)
+
+        # --- lines 4-5: best-effort + running, by descending slope --------
+        rest = [j for j in active
+                if (j.status == "queued" and not j.job.guaranteed)
+                or j.status == "running"]
+        if self.cfg.reallocate_resources:
+            rest.sort(key=lambda j: self._sort_slopes(j, cluster),
+                      reverse=True)
+            # anti-starvation: long-queued best-effort jobs first
+            starved = [j for j in rest if j.status == "queued"
+                       and now - j.job.submit > self.cfg.starvation_s]
+            rest = starved + [j for j in rest if j not in starved]
+            for js in rest:
+                self._schedule_job(js, active, cluster, now)
+        else:
+            for js in rest:
+                if js.status == "queued":
+                    self._schedule_job(js, active, cluster, now)
+
+    def _sort_slopes(self, js: JobState, cluster: Cluster):
+        c = self.curve(js, cluster)
+        g = js.total_gpus
+        return (c.slope_gpu(g), c.slope_cpu(g or 1, js.total_cpus or 1))
+
+    def _quota_ok(self, js: JobState, jobs: list[JobState]) -> bool:
+        quota = self.quotas.get(js.job.tenant)
+        if quota is None:
+            return True
+        used = sum(j.min_res[0] if j.min_res else j.job.req_gpus
+                   for j in jobs
+                   if j.status == "running" and j.job.guaranteed
+                   and j.job.tenant == js.job.tenant)
+        need = js.min_res[0] if js.min_res else js.job.req_gpus
+        return used + need <= quota
+
+    # ------------------------------------------------------------------
+    def _schedule_job(self, js: JobState, active: list[JobState],
+                      cluster: Cluster, now: float) -> None:
+        """ScheduleJob (lines 6-24): greedy node walk with shrink."""
+        curve = self.curve(js, cluster)
+        min_g, min_c = js.min_res
+        target_g = self._target_gpus(js, curve, cluster)
+        if target_g <= 0:
+            return
+        if js.status == "running" and not self.cfg.reallocate_resources:
+            return
+
+        others = [j for j in active if j is not js and j.status == "running"]
+        placement: Placement = {}
+        got_g = got_c = 0
+        my_slope = curve.slope_gpu(0 if js.status == "queued"
+                                   else js.total_gpus)
+
+        shrunk: list[tuple[JobState, int]] = []
+        used = used_per_node([j for j in others])
+        for node in cluster.nodes:
+            if got_g >= target_g:
+                break
+            fg, fc, fm = node.free(used)
+            take_g = min(fg, target_g - got_g)
+            take_c = min(fc, self.cfg.cpus_per_gpu * take_g)
+            # lines 8-16: reclaim from the least-sensitive over-min job
+            while take_g < min(node.gpus, target_g - got_g) \
+                    and self.cfg.reallocate_resources:
+                victim = self._lowest_slope_over_min(others, node.id, cluster)
+                if victim is None:
+                    break
+                v_curve = self.curve(victim, cluster)
+                v_slope = v_curve.slope_gpu_down(victim.total_gpus)
+                need_min = got_g + take_g < min_g
+                if not (my_slope > v_slope or need_min):
+                    break
+                self._shrink(victim, node.id, cluster)
+                shrunk.append((victim, node.id))
+                fg, fc, fm = node.free(used_per_node(others))
+                take_g = min(fg, target_g - got_g)
+                take_c = min(fc, self.cfg.cpus_per_gpu * take_g)
+            if take_g > 0:
+                placement[node.id] = (take_g, take_c, 0.0)
+                got_g += take_g
+                got_c += take_c
+            used = used_per_node(others)
+
+        # lines 19-24: commit if ≥ minRes
+        if got_g >= max(min_g, 1):
+            pernode = tuple(sorted((g for g, _, _ in placement.values()),
+                                   reverse=True))
+            if self.cfg.reconfigure_plans:
+                pt = curve.best_plan_at_most(got_g, got_c,
+                                             gpus_per_node=pernode)
+                plan = pt.plan
+            else:
+                plan = self._fixed_plan(js, got_g)
+            if plan is None:
+                self._undo(shrunk, js)
+                return
+            alloc = Alloc(got_g, got_c, gpus_per_node=pernode)
+            est = memory.estimate(js.job.profile, plan, alloc, self.env)
+            if est.gpu_bytes > self.env.gpu_mem:       # AllocMem failure
+                self._undo(shrunk, js)
+                return
+            # reconfiguration penalty guard (Sec 5.2)
+            if js.status == "running" and not self._reconfig_ok(js, plan,
+                                                                alloc, now):
+                return
+            for nid in placement:
+                g, c, _ = placement[nid]
+                placement[nid] = (g, c, est.host_bytes / max(len(placement), 1))
+            changed = (plan != js.plan or alloc != js.alloc)
+            js.placement = placement
+            js.alloc = alloc
+            js.plan = plan
+            if js.status == "queued":
+                js.status = "running"
+                js.start_time = now if js.start_time is None else js.start_time
+            elif changed:
+                js.n_reconfig += 1
+        else:
+            self._undo(shrunk, js)
+
+    # ------------------------------------------------------------------
+    def _target_gpus(self, js: JobState, curve: SensitivityCurve,
+                     cluster: Cluster) -> int:
+        """Grow while the slope is positive, up to cluster size."""
+        if not self.cfg.reallocate_resources:
+            return js.job.req_gpus
+        g = js.job.req_gpus
+        best_t = curve.throughput(g)
+        hi = cluster.total_gpus
+        while g < hi and curve.throughput(g + 1) > best_t * 1.001:
+            g += 1
+            best_t = curve.throughput(g)
+        return g
+
+    def _fixed_plan(self, js: JobState, gpus: int) -> ExecutionPlan | None:
+        """Rubick-R: keep the plan family, scale only the DP size (Sia's
+        approach for 3D-parallel jobs)."""
+        orig = js.job.orig_plan
+        tp_pp = orig.tp * orig.pp
+        if gpus % tp_pp:
+            return None
+        d = gpus // tp_pp
+        if js.job.profile.b % (d * max(orig.ga_steps, 1)):
+            return None
+        plan = orig.with_(dp=d)
+        alloc = Alloc(gpus, self.cfg.cpus_per_gpu * gpus)
+        if not memory.feasible(js.job.profile, plan, alloc, self.env):
+            return None
+        return plan
+
+    def _lowest_slope_over_min(self, others: list[JobState], node_id: int,
+                               cluster: Cluster) -> JobState | None:
+        cands = []
+        for j in others:
+            if node_id not in j.placement or j.placement[node_id][0] <= 0:
+                continue
+            min_g = j.min_res[0] if j.min_res else j.job.req_gpus
+            if j.total_gpus <= max(min_g, 0):
+                continue
+            if j.total_gpus <= 0:
+                continue
+            cands.append(j)
+        if not cands:
+            return None
+        return min(cands, key=lambda j: self.curve(j, cluster)
+                   .slope_gpu_down(j.total_gpus))
+
+    def _shrink(self, victim: JobState, node_id: int, cluster: Cluster):
+        g, c, m = victim.placement[node_id]
+        dg = min(DELTA_GPU, g)
+        dc = min(self.cfg.cpus_per_gpu * dg, c)
+        if g - dg <= 0:
+            del victim.placement[node_id]
+        else:
+            victim.placement[node_id] = (g - dg, c - dc, m)
+        new_g = victim.total_gpus
+        if new_g == 0:
+            victim.status = "queued"     # preemption (best-effort only)
+            victim.plan = None
+            victim.alloc = None
+            victim.placement = {}
+        else:
+            curve = self.curve(victim, cluster)
+            pt = curve.best_plan_at_most(new_g, victim.total_cpus,
+                                         victim.gpus_per_node_tuple())
+            victim.plan = pt.plan if pt.plan else victim.plan
+            victim.alloc = Alloc(new_g, victim.total_cpus,
+                                 gpus_per_node=victim.gpus_per_node_tuple())
+            victim.n_reconfig += 1
+
+    def _undo(self, shrunk: list, js: JobState) -> None:
+        # shrinks already mutated victims; in this greedy heuristic we keep
+        # them (they remain ≥ minRes, so guarantees hold) — matching the
+        # paper's repeated-Δr semantics.
+        return
+
+    def _reconfig_ok(self, js: JobState, plan, alloc, now: float) -> bool:
+        if plan == js.plan and alloc == js.alloc:
+            return True
+        T = max(js.run_time, 1.0)
+        N = js.n_reconfig + 1
+        return (T - N * self.cfg.reconfig_cost_s) / T \
+            >= self.cfg.reconfig_threshold
+
+
+def throughput_of(js: JobState, env: Env) -> float:
+    """Oracle-free predicted throughput of a job's current assignment."""
+    from repro.core.perfmodel import predict_throughput
+    if js.status != "running" or js.plan is None or js.alloc is None:
+        return 0.0
+    return predict_throughput(js.job.profile, js.plan, js.alloc, env,
+                              js.fitted)

@@ -1,0 +1,129 @@
+"""Resource sensitivity curves (paper Sec 5.2, Fig 6).
+
+For a job, a curve maps a resource amount (GPUs, with other types fixed —
+or CPUs under offload plans) to the BEST feasible execution plan and its
+predicted throughput.  Curves are monotone-enveloped ("the curve only
+connects the highest points") and flat across invalid GPU counts.  Slopes
+(throughput delta per resource unit) drive both the allocation order
+(SortBySlope) and the shrink decisions (GetLowestSlopeOverMinJob).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import lru_cache
+
+from repro.core import memory
+from repro.core.perfmodel import (Alloc, Env, FitParams, ModelProfile,
+                                  predict_throughput)
+from repro.parallel.plan import ExecutionPlan, enumerate_plans
+
+
+@dataclass(frozen=True)
+class CurvePoint:
+    gpus: int
+    plan: ExecutionPlan | None
+    throughput: float             # samples/s (0 = infeasible)
+
+
+class SensitivityCurve:
+    """Best-plan throughput vs GPU count for one job (fitted params)."""
+
+    def __init__(self, profile: ModelProfile, fitted: FitParams,
+                 env: Env | None = None, max_gpus: int = 64,
+                 cpus_per_gpu: int = 12, max_ga: int = 8):
+        self.profile = profile
+        self.fitted = fitted
+        self.env = env or Env()
+        self.max_gpus = max_gpus
+        self.cpus_per_gpu = cpus_per_gpu
+        self.max_ga = max_ga
+        self._points: dict[tuple, CurvePoint] = {}
+
+    # ------------------------------------------------------------------
+    def best_plan(self, gpus: int, cpus: int | None = None,
+                  gpus_per_node: tuple[int, ...] = ()) -> CurvePoint:
+        """GetBestPlan: enumerate feasible plans at this allocation, pick the
+        highest predicted throughput (paper: 'searches for the best
+        execution plan by enumerating the feasible plans')."""
+        cpus = cpus if cpus is not None else self.cpus_per_gpu * gpus
+        key = (gpus, cpus, gpus_per_node)
+        if key in self._points:
+            return self._points[key]
+        if gpus <= 0:
+            pt = CurvePoint(gpus, None, 0.0)
+            self._points[key] = pt
+            return pt
+        alloc = Alloc(gpus, cpus, gpus_per_node=gpus_per_node)
+        best: CurvePoint = CurvePoint(gpus, None, 0.0)
+        for plan in enumerate_plans(gpus, self.profile.b, max_ga=self.max_ga):
+            if not memory.feasible(self.profile, plan, alloc, self.env):
+                continue
+            thpt = predict_throughput(self.profile, plan, alloc, self.env,
+                                      self.fitted)
+            if thpt > best.throughput:
+                best = CurvePoint(gpus, plan, thpt)
+        self._points[key] = best
+        return best
+
+    def best_plan_at_most(self, gpus: int, cpus: int | None = None,
+                          gpus_per_node: tuple[int, ...] = ()) -> CurvePoint:
+        """Best plan using AT MOST ``gpus`` (idle spares allowed) — the
+        envelope point, not just the exact-g point."""
+        best = CurvePoint(gpus, None, 0.0)
+        for g in range(min(gpus, self.max_gpus), 0, -1):
+            pt = self.best_plan(g, cpus, gpus_per_node if g == gpus else ())
+            if pt.throughput > best.throughput:
+                best = pt
+        return best
+
+    def throughput(self, gpus: int, cpus: int | None = None,
+                   gpus_per_node: tuple[int, ...] = ()) -> float:
+        """Monotone envelope: max throughput achievable with ≤ gpus (the
+        curve 'remains flat for invalid GPU numbers')."""
+        if cpus is None:
+            if not hasattr(self, "_env_memo"):
+                self._env_memo: dict[int, float] = {0: 0.0}
+            memo = self._env_memo
+            hi = min(gpus, self.max_gpus)
+            for g in range(len(memo), hi + 1):
+                memo[g] = max(memo[g - 1], self.best_plan(g).throughput)
+            return memo[max(0, hi)]
+        best = 0.0
+        for g in range(1, min(gpus, self.max_gpus) + 1):
+            pt = self.best_plan(g, min(cpus, self.cpus_per_gpu * g))
+            best = max(best, pt.throughput)
+        return best
+
+    # ------------------------------------------------------------------
+    def slope_gpu(self, gpus: int) -> float:
+        """Throughput gain of the NEXT GPU (used to rank jobs)."""
+        if gpus >= self.max_gpus:
+            return 0.0
+        return max(0.0, self.throughput(gpus + 1) - self.throughput(gpus))
+
+    def slope_gpu_down(self, gpus: int) -> float:
+        """Throughput LOST by taking one GPU away (shrink decisions)."""
+        if gpus <= 0:
+            return float("inf")
+        return max(0.0, self.throughput(gpus) - self.throughput(gpus - 1))
+
+    def slope_cpu(self, gpus: int, cpus: int, delta: int = 4) -> float:
+        if gpus <= 0:
+            return 0.0
+        return max(0.0, self.best_plan(gpus, cpus + delta).throughput
+                   - self.best_plan(gpus, cpus).throughput) / delta
+
+
+def min_resources(curve: SensitivityCurve, req_gpus: int, req_cpus: int,
+                  baseline_perf: float) -> tuple[int, int]:
+    """Paper Sec 5.2: the fewest resources (≤ requested in each dimension)
+    achieving the performance of the original request+plan; falls back to
+    the original request when none found."""
+    for g in range(1, req_gpus + 1):
+        c = min(req_cpus, curve.cpus_per_gpu * g)
+        pt = curve.best_plan(g, c)
+        if pt.throughput >= baseline_perf and pt.plan is not None:
+            return g, c
+    return req_gpus, req_cpus

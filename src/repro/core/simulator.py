@@ -1,0 +1,171 @@
+"""Discrete-time cluster simulator (paper Sec 7.4).
+
+Jobs progress at the ORACLE's throughput (the stand-in for real cluster
+measurements — the scheduler only ever sees its own fitted model), the
+scheduler runs on every arrival/completion event, and each plan/allocation
+change pauses the job for the checkpoint-resume cost δ.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.cluster import Cluster, Job, JobState, check_capacity
+from repro.core.oracle import AnalyticOracle, profiling_samples
+from repro.core.perfmodel import Alloc, Env, FitParams, fit
+
+
+@dataclass
+class SimResult:
+    scheduler: str
+    jcts: dict[str, float]
+    makespan: float
+    n_reconfig: int
+    guarantee_violations: int
+    jct_by_class: dict[str, list[float]] = field(default_factory=dict)
+
+    @property
+    def avg_jct(self) -> float:
+        return float(np.mean(list(self.jcts.values()))) if self.jcts else 0.0
+
+    @property
+    def p99_jct(self) -> float:
+        if not self.jcts:
+            return 0.0
+        return float(np.percentile(list(self.jcts.values()), 99))
+
+    def summary(self) -> dict:
+        out = {"scheduler": self.scheduler,
+               "avg_jct_h": self.avg_jct / 3600,
+               "p99_jct_h": self.p99_jct / 3600,
+               "makespan_h": self.makespan / 3600,
+               "n_reconfig": self.n_reconfig,
+               "guarantee_violations": self.guarantee_violations}
+        for cls, vals in self.jct_by_class.items():
+            out[f"avg_jct_{cls}_h"] = float(np.mean(vals)) / 3600 if vals else 0
+        return out
+
+
+class Simulator:
+    def __init__(self, cluster: Cluster, scheduler, oracle=None,
+                 env: Env | None = None, reconfig_cost: float = 78.0,
+                 fit_cache: dict | None = None):
+        self.cluster = cluster
+        self.scheduler = scheduler
+        self.env = env or Env()
+        self.oracle = oracle or AnalyticOracle(env=self.env)
+        self.reconfig_cost = reconfig_cost
+        self.fit_cache = fit_cache if fit_cache is not None else {}
+
+    # ------------------------------------------------------------------
+    def _fitted(self, job: Job) -> FitParams:
+        """Per-model-type fitted params (paper: model reused across jobs of
+        the same model-type flag; profiling takes ~210 s once)."""
+        key = job.profile.name + f"@b{job.profile.b}"
+        if key not in self.fit_cache:
+            samples = profiling_samples(job.profile, self.oracle)
+            if len(samples) >= 4:
+                self.fit_cache[key] = fit(job.profile, samples, self.env)
+            else:
+                self.fit_cache[key] = FitParams()
+        return self.fit_cache[key]
+
+    def _true_throughput(self, js: JobState) -> float:
+        if js.status != "running" or js.plan is None or js.alloc is None:
+            return 0.0
+        t = self.oracle.measure(js.job.profile, js.plan, js.alloc)
+        return js.job.profile.b / t if math.isfinite(t) and t > 0 else 0.0
+
+    # ------------------------------------------------------------------
+    def run(self, jobs: list[Job], max_time: float = 7 * 86400.0,
+            ) -> SimResult:
+        states = [JobState(job=j, fitted=self._fitted(j)) for j in jobs]
+        arrivals = sorted(states, key=lambda s: s.job.submit)
+        t = 0.0
+        pending: list[JobState] = list(arrivals)
+        active: list[JobState] = []
+        pause_until: dict[int, float] = {}
+        violations = 0
+
+        def next_arrival() -> float:
+            return pending[0].job.submit if pending else math.inf
+
+        while (pending or any(s.status != "done" for s in active)) \
+                and t < max_time:
+            # admit arrivals at time t
+            while pending and pending[0].job.submit <= t + 1e-9:
+                active.append(pending.pop(0))
+
+            prev = {id(s): (s.plan, s.alloc, s.status) for s in active}
+            self.scheduler.schedule(active, self.cluster, t)
+            assert check_capacity(self.cluster, active), "over-allocation"
+            for s in active:
+                was = prev.get(id(s))
+                if was and s.status == "running" and was[2] == "running" \
+                        and (s.plan, s.alloc) != was[:2]:
+                    pause_until[id(s)] = t + self.reconfig_cost
+
+            # compute throughputs (paused jobs contribute 0 until resumed)
+            thpts = {}
+            for s in active:
+                if s.status != "running":
+                    continue
+                if pause_until.get(id(s), 0.0) > t:
+                    thpts[id(s)] = 0.0
+                else:
+                    thpts[id(s)] = self._true_throughput(s)
+
+            # time to next event
+            dt = next_arrival() - t
+            for s in active:
+                if s.status != "running":
+                    continue
+                pu = pause_until.get(id(s), 0.0)
+                if pu > t:
+                    dt = min(dt, pu - t)
+                    continue
+                th = thpts[id(s)]
+                if th <= 0:
+                    continue
+                remain_iters = s.job.target_iters - s.progress
+                remain_s = remain_iters * s.job.profile.b / th
+                dt = min(dt, remain_s)
+            if not math.isfinite(dt):
+                break
+            dt = max(dt, 1.0)
+
+            # advance
+            for s in active:
+                if s.status != "running":
+                    continue
+                if pause_until.get(id(s), 0.0) > t + dt - 1e-9:
+                    continue
+                eff = dt
+                pu = pause_until.get(id(s), 0.0)
+                if pu > t:
+                    eff = t + dt - pu
+                th = thpts[id(s)]
+                s.progress += th * eff / s.job.profile.b
+                s.run_time += eff
+                if s.progress >= s.job.target_iters - 1e-6:
+                    s.status = "done"
+                    s.finish_time = t + dt
+                    s.placement = {}
+            t += dt
+
+        jcts = {}
+        by_class: dict[str, list[float]] = {"guaranteed": [], "best_effort": []}
+        n_rcfg = 0
+        for s in active:
+            if s.finish_time is None:
+                s.finish_time = t                    # censored
+            jcts[s.job.name] = s.finish_time - s.job.submit
+            cls = "guaranteed" if s.job.guaranteed else "best_effort"
+            by_class[cls].append(jcts[s.job.name])
+            n_rcfg += s.n_reconfig
+        makespan = max((s.finish_time for s in active), default=0.0)
+        return SimResult(getattr(self.scheduler, "name", "?"), jcts,
+                         makespan, n_rcfg, violations, by_class)

@@ -1,0 +1,99 @@
+"""Synthetic trace generation (paper Sec 7.3).
+
+Philly-style: bursty arrivals over a window, lognormal durations, GPU
+requests from the Microsoft-trace distribution, model chosen from the
+Table-2 set.  Variants:
+  base — random feasible initial plan per job;
+  mt   — two tenants (A: 64-GPU quota, guaranteed; B: no quota, best-effort);
+  bp   — initial plan replaced with the best plan at requested resources.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core import memory, paper_models
+from repro.core.cluster import Job
+from repro.core.oracle import AnalyticOracle
+from repro.core.perfmodel import Alloc, Env
+from repro.parallel.plan import ExecutionPlan, enumerate_plans
+
+# Philly-like request-size distribution (Jeon et al., ATC'19)
+GPU_SIZES = [1, 2, 4, 8, 16, 32, 64]
+GPU_PROBS = [0.45, 0.15, 0.15, 0.13, 0.07, 0.03, 0.02]
+
+
+def _feasible_plans(profile, gpus: int, env: Env, allow_tp_pp: bool,
+                    max_ga: int = 8) -> list[ExecutionPlan]:
+    alloc = Alloc(gpus, 12 * gpus)
+    out = []
+    for plan in enumerate_plans(gpus, profile.b, max_ga=max_ga,
+                                allow_tp_pp=allow_tp_pp):
+        if memory.feasible(profile, plan, alloc, env):
+            out.append(plan)
+    return out
+
+
+def generate(n_jobs: int = 60, hours: float = 12.0, seed: int = 0,
+             variant: str = "base", env: Env | None = None,
+             large_fraction: float | None = None,
+             load_scale: float = 1.0) -> list[Job]:
+    """Returns jobs sorted by submit time.  ``load_scale`` compresses the
+    arrival window (higher load); ``large_fraction`` overrides the share of
+    LLaMA-class models (paper Fig 11)."""
+    env = env or Env()
+    rng = np.random.default_rng(seed)
+    oracle = AnalyticOracle(env=env)
+    names = list(paper_models.TABLE2)
+    jobs: list[Job] = []
+    window = hours * 3600.0 / max(load_scale, 1e-6)
+    # bursty arrivals: half the jobs in the busiest third of the window
+    t_arr = np.sort(np.where(rng.random(n_jobs) < 0.5,
+                             rng.uniform(0, window / 3, n_jobs),
+                             rng.uniform(0, window, n_jobs)))
+    for i in range(n_jobs):
+        if large_fraction is not None:
+            if rng.random() < large_fraction:
+                name = rng.choice(list(paper_models.LARGE)[1:])   # llama class
+            else:
+                name = rng.choice(list(paper_models.SMALL))
+        else:
+            name = rng.choice(names)
+        profile = paper_models.TABLE2[name]
+        small = name in paper_models.SMALL
+        gpus = int(rng.choice(GPU_SIZES, p=GPU_PROBS))
+        # paper: "In case the original GPU number is infeasible for the
+        # model, we use a feasible one" — keep GPU-hours constant.
+        allow_tp_pp = not small                     # paper disables TP/PP
+        plans = _feasible_plans(profile, gpus, env, allow_tp_pp)
+        tries = 0
+        while not plans and tries < 6:
+            gpus = min(gpus * 2, 64)
+            plans = _feasible_plans(profile, gpus, env, allow_tp_pp)
+            tries += 1
+        if not plans:
+            continue
+        if variant == "bp":
+            plan = max(plans, key=lambda p: oracle.throughput(
+                profile, p, Alloc(gpus, 12 * gpus)))
+        else:
+            plan = plans[int(rng.integers(len(plans)))]
+        # duration: lognormal hours → target iterations at the oracle rate
+        dur = float(rng.lognormal(mean=math.log(1800), sigma=1.1))
+        dur = min(max(dur, 120.0), 6 * 3600.0)
+        thpt = oracle.throughput(profile, plan, Alloc(gpus, 12 * gpus))
+        if thpt <= 0:
+            continue
+        target_iters = max(10.0, dur * thpt / profile.b)
+        tenant, guaranteed = "A", True
+        if variant == "mt":
+            tenant = "A" if rng.random() < 0.5 else "B"
+            guaranteed = tenant == "A"
+        jobs.append(Job(
+            name=f"job{i:04d}-{name}", profile=profile,
+            submit=float(t_arr[i]), target_iters=target_iters,
+            req_gpus=gpus, req_cpus=12 * gpus, orig_plan=plan,
+            guaranteed=guaranteed, tenant=tenant))
+    return jobs

@@ -1,0 +1,131 @@
+"""Flash attention (causal/bidirectional, GQA) as a Pallas TPU kernel.
+
+TPU adaptation (vs the CUDA FlashAttention-2 algorithm): tiles live in VMEM
+via BlockSpecs; the kv dimension is the MINOR grid axis, which TPU executes
+sequentially per core, so the online-softmax state (m, l, acc) is carried in
+VMEM scratch across kv steps instead of CUDA shared-memory/warp shuffles.
+Block shapes are MXU-aligned (multiples of 128 where the head_dim allows).
+
+GQA is expressed in the index_map: the kv block for flattened q-head index
+``bh`` is ``bh // group`` — no materialized KV repetition.
+
+Grid: (B·Hq, nq, nk)  — nk minor/sequential.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, bq: int, bk: int, nk: int,
+            window: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = kj * bk
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                   # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                   # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                   # (bk, dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale    # (bq, bk)
+        if causal or window:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            mask = jnp.ones((bq, bk), jnp.bool_)
+            if causal:
+                mask &= qpos >= kpos
+            if window:
+                mask &= qpos - kpos < window
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    # Skip tiles fully outside the causal band / window.
+    if causal or window:
+        live = k_start <= q_start + bq - 1 if causal else \
+            jnp.bool_(True) == jnp.bool_(True)
+        if window:
+            # dead when even the newest k is older than the window
+            live = jnp.logical_and(live,
+                                   q_start - (k_start + bk - 1) < window)
+        pl.when(live)(_compute)
+    else:
+        _compute()
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    scale: float | None = None,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, Hq, d); k, v: (B, Sk, Hkv, d/dv) -> (B, Sq, Hq, dv)."""
+    B, Sq, Hq, d = q.shape
+    _, Sk, Hkv, dv = v.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    nq, nk = Sq // bq, Sk // bk
+
+    # (B, S, H, d) -> (B·H, S, d)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, dv)
+
+    grid = (B * Hq, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, bq=bq,
+                          bk=bk, nk=nk, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, kj: (bh // group, kj, 0)),
+            pl.BlockSpec((1, bk, dv), lambda bh, qi, kj: (bh // group, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, dv), q.dtype),
+        scratch_shapes=_scratch(bq, dv),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, Sq, dv).transpose(0, 2, 1, 3)
+
+
+def _scratch(bq: int, dv: int):
+    from jax.experimental.pallas import tpu as pltpu
+    return [pltpu.VMEM((bq,), jnp.float32),       # m (running max)
+            pltpu.VMEM((bq,), jnp.float32),       # l (running denom)
+            pltpu.VMEM((bq, dv), jnp.float32)]    # acc

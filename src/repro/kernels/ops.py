@@ -1,0 +1,45 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only — the
+kernels TARGET TPU and are validated in interpret mode; on a real TPU
+backend the same calls compile to Mosaic).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import wkv6 as _wkv
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    it = _default_interpret() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=it)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B_, C, *, chunk: int = 128,
+             interpret: bool | None = None):
+    it = _default_interpret() if interpret is None else interpret
+    return _ssd.ssd_scan(x, dt, A, B_, C, chunk=chunk, interpret=it)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, logw, u, *, chunk: int = 32,
+         interpret: bool | None = None):
+    it = _default_interpret() if interpret is None else interpret
+    return _wkv.wkv6(r, k, v, logw, u, chunk=chunk, interpret=it)

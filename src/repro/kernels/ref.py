@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are intentionally the most naive formulations (full softmax; per-
+TIMESTEP recurrences via lax.scan) — independent of both the kernels and
+the chunked model-path implementations, so tests triangulate all three.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """Full-materialization softmax attention with GQA.
+    q: (B,Sq,Hq,d); k,v: (B,Sk,Hkv,·) -> (B,Sq,Hq,dv), f32 math."""
+    B, Sq, Hq, d = q.shape
+    _, Sk, Hkv, dv = v.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(B, Sq, Hkv, G, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg, kf) * scale
+    qpos = (Sk - Sq) + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window:
+        m &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(m[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqs,bshd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, dv).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B_, C):
+    """Per-timestep SSM recurrence (the definition, O(S) sequential).
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); B_/C: (B,S,N) -> (B,S,H,P) f32."""
+    Bb, S, H, P = x.shape
+
+    xdt = (x.astype(jnp.float32) * dt[..., None])
+    da = jnp.exp(dt * A[None, None, :])                  # (B,S,H)
+
+    def step(h, inp):
+        xt, dat, bt, ct = inp                            # (B,H,P),(B,H),(B,N)
+        h = h * dat[:, :, None, None] + \
+            jnp.einsum("bn,bhp->bhpn", bt, xt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, P, B_.shape[-1]), jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (xdt.transpose(1, 0, 2, 3), da.transpose(1, 0, 2),
+                          B_.astype(jnp.float32).transpose(1, 0, 2),
+                          C.astype(jnp.float32).transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3)
+
+
+def wkv6_ref(r, k, v, logw, u):
+    """Per-timestep RWKV-6 recurrence:
+        S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+        y_t = r_t (S_{t-1} + diag(u) k_tᵀ v_t)
+    r,k,v,logw: (B,S,H,hd); u: (H,hd) -> (B,S,H,hd) f32."""
+    B, S, H, hd = r.shape
+
+    def step(Sst, inp):
+        rt, kt, vt, wt = [t.astype(jnp.float32) for t in inp]   # (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, Sst + u[None, :, :, None] * kv)
+        Sst = jnp.exp(wt)[..., None] * Sst + kv
+        return Sst, y
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    _, ys = jax.lax.scan(step, S0,
+                         tuple(t.transpose(1, 0, 2, 3)
+                               for t in (r, k, v, logw)))
+    return ys.transpose(1, 0, 2, 3)

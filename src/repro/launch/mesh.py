@@ -1,0 +1,32 @@
+"""Mesh construction for single-pod and multi-pod deployments.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — smoke tests must keep seeing 1 CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """The assignment's production mesh: 16×16 (256 chips / pod) or
+    2×16×16 (2 pods = 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(dp: int, tp: int, pods: int = 1) -> Mesh:
+    """Mesh for an arbitrary (dp × tp) job (Rubick jobs run at 1–64 GPUs)."""
+    n = dp * tp * pods
+    if len(jax.devices()) < n:
+        raise ValueError(f"need {n} devices, have {len(jax.devices())}")
+    if pods > 1:
+        return jax.make_mesh((pods, dp, tp), ("pod", "data", "model"))
+    return jax.make_mesh((dp, tp), ("data", "model"))
+
+
+def single_device_mesh() -> Mesh:
+    return jax.make_mesh((1, 1), ("data", "model"))

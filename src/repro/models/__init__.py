@@ -1,0 +1,4 @@
+from repro.models.api import Model, build
+from repro.models.transformer import ModelOpts
+
+__all__ = ["Model", "ModelOpts", "build"]

@@ -1,0 +1,125 @@
+"""Unified model API: ``build(cfg, opts) -> Model``.
+
+Every architecture family exposes the same five entry points so the
+training/serving runtimes, the dry-run, and the Rubick scheduler treat all
+10 assigned architectures uniformly:
+
+    init(rng) -> params
+    loss(params, batch) -> (scalar, metrics)          [train step]
+    init_cache(batch, max_len) -> cache               [decode state]
+    prefill(params, cache, batch) -> (cache, logits)  [inference-prefill]
+    decode_step(params, cache, tokens) -> (cache, logits)
+
+``input_specs(shape)`` returns ShapeDtypeStruct stand-ins for every model
+input of the given (shape × step-kind) cell — no device allocation.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, nn, rwkv_model, transformer
+from repro.models.transformer import ModelOpts
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    opts: ModelOpts
+    init: Callable[..., Any]
+    loss: Callable[..., Any]
+    init_cache: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for the batch of this cell."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32)}
+        specs: dict = {}
+        if cfg.frontend == "vision":
+            n_text = S - cfg.n_patches
+            specs["tokens"] = jax.ShapeDtypeStruct((B, n_text), jnp.int32)
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), jnp.float32)
+        elif cfg.frontend == "audio":
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frames, cfg.d_model), jnp.float32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return specs
+
+    def cache_specs(self, shape: ShapeConfig) -> Any:
+        """Allocation-free decode-cache spec for this cell."""
+        return jax.eval_shape(
+            lambda: self.init_cache(shape.global_batch, shape.seq_len))
+
+    def dummy_batch(self, shape: ShapeConfig, rng=None) -> dict:
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        out = {}
+        for k, spec in self.input_specs(shape).items():
+            if spec.dtype == jnp.int32:
+                out[k] = jax.random.randint(rng, spec.shape, 0,
+                                            self.cfg.vocab_size, jnp.int32)
+            else:
+                out[k] = jax.random.normal(rng, spec.shape, spec.dtype) * 0.02
+        return out
+
+
+def build(cfg: ModelConfig, opts: ModelOpts | None = None) -> Model:
+    opts = opts or ModelOpts()
+    t = transformer
+    if cfg.family == "hybrid":
+        return Model(
+            cfg, opts,
+            init=partial(hybrid.hybrid_init, cfg=cfg),
+            loss=lambda p, b: hybrid.hybrid_loss(p, b, cfg, opts),
+            init_cache=lambda batch, max_len: hybrid.hybrid_init_cache(
+                cfg, batch, max_len),
+            prefill=lambda p, c, b: hybrid.hybrid_prefill(p, c, b, cfg, opts),
+            decode_step=lambda p, c, tok: hybrid.hybrid_decode_step(
+                p, c, tok, cfg, opts),
+        )
+    if cfg.family == "ssm" and cfg.rwkv:
+        return Model(
+            cfg, opts,
+            init=partial(rwkv_model.rwkv_init, cfg=cfg),
+            loss=lambda p, b: rwkv_model.rwkv_loss(p, b, cfg, opts),
+            init_cache=lambda batch, max_len: rwkv_model.rwkv_init_cache(
+                cfg, batch, max_len),
+            prefill=lambda p, c, b: rwkv_model.rwkv_prefill(p, c, b, cfg, opts),
+            decode_step=lambda p, c, tok: rwkv_model.rwkv_decode_step(
+                p, c, tok, cfg, opts),
+        )
+    if cfg.is_encdec:
+        return Model(
+            cfg, opts,
+            init=partial(encdec.encdec_init, cfg=cfg),
+            loss=lambda p, b: encdec.encdec_loss(p, b, cfg, opts),
+            init_cache=lambda batch, max_len: encdec.encdec_init_cache(
+                cfg, batch, max_len),
+            prefill=lambda p, c, b: encdec.encdec_prefill(p, c, b, cfg, opts),
+            decode_step=lambda p, c, tok: encdec.encdec_decode_step(
+                p, c, tok, cfg, opts),
+        )
+    # decoder-only (dense / moe / vlm)
+    return Model(
+        cfg, opts,
+        init=partial(t.decoder_init, cfg=cfg),
+        loss=lambda p, b: t.decoder_loss(p, b, cfg, opts),
+        init_cache=lambda batch, max_len: t.decoder_init_cache(
+            cfg, batch, max_len),
+        prefill=lambda p, c, b: t.decoder_prefill(p, c, b, cfg, opts),
+        decode_step=lambda p, c, tok: t.decoder_decode_step(
+            p, c, tok, cfg, opts),
+    )

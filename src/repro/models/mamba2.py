@@ -1,0 +1,188 @@
+"""Mamba-2 (SSD — state space duality, arXiv:2405.21060) block in pure JAX.
+
+Chunked SSD algorithm: intra-chunk "attention-like" term with a cumulative
+decay mask + inter-chunk state recurrence carried by ``lax.scan``.  This jnp
+implementation is both the model path (CPU / dry-run) and the numerical
+oracle for the Pallas kernel in ``repro/kernels/ssd_scan.py``.
+
+Layout: x (B,S,H,P) with H heads of headdim P; scalar decay per head;
+B/C projections shared across heads (n_groups=1), state size N.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_ssm_heads(cfg: ModelConfig) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def mamba2_init(key, cfg: ModelConfig, n_stack: int, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    D, di, N = cfg.d_model, d_inner(cfg), cfg.ssm_state
+    H = n_ssm_heads(cfg)
+    conv_dim = di + 2 * N                                   # x, B, C share the conv
+    proj = 2 * di + 2 * N + H                               # z, x, B, C, dt
+    return {
+        "in_proj": nn.stacked_dense_init(ks[0], n_stack, D, proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (n_stack, cfg.ssm_conv, conv_dim),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((n_stack, conv_dim), dtype),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.linspace(1.0, 16.0, H, dtype=jnp.float32), (n_stack, H)).copy()),
+        "D_skip": jnp.ones((n_stack, H), jnp.float32),
+        "dt_bias": jnp.zeros((n_stack, H), jnp.float32),
+        "gamma": jnp.zeros((n_stack, di), dtype),
+        "out_proj": nn.stacked_dense_init(ks[2], n_stack, di, D, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+def ssd_chunked(x, dt, A, B_, C, chunk: int, h0=None):
+    """Chunked SSD scan (single ``lax.scan`` over chunks, carrying the state).
+
+    x: (B,S,H,P) raw inputs; dt: (B,S,H) (post-softplus); A: (H,) negative
+    continuous decay; B_/C: (B,S,N) (n_groups=1).
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+
+    Memory: one (B,Q,Q,H) intra-chunk decay mask at a time — never all
+    chunks at once — so the working set matches the Pallas kernel's tiling.
+    """
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+
+    dA = (dt * A[None, None, :]).astype(jnp.float32)         # (B,S,H), ≤ 0
+    xdt = x * dt[..., None].astype(x.dtype)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def to_chunks(t, extra):
+        return t.reshape((Bb, nc, chunk) + extra).transpose(
+            (1, 0, 2) + tuple(range(3, 3 + len(extra))))
+
+    xs = (to_chunks(xdt, (H, P)), to_chunks(dA, (H,)),
+          to_chunks(B_, (N,)), to_chunks(C, (N,)))
+
+    def step(h, inp):
+        x_c, dA_c, B_c, C_c = inp                            # (B,Q,·)
+        cum = jnp.cumsum(dA_c, axis=1)                       # (B,Q,H) f32
+        diff = cum[:, :, None, :] - cum[:, None, :, :]       # (B,Q,Q,H)
+        # double-where: masked entries have diff > 0 (exp overflows and its
+        # cotangent would be 0·inf = NaN) — zero the exponent first.
+        m4 = mask[None, :, :, None]
+        L = jnp.where(m4, jnp.exp(jnp.where(m4, diff, 0.0)), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", C_c, B_c,
+                        preferred_element_type=jnp.float32)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp",
+                             cb, L, x_c.astype(jnp.float32))
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)            # (B,Q,H)
+        s_c = jnp.einsum("bjn,bjh,bjhp->bhpn", B_c.astype(jnp.float32),
+                         decay_end, x_c.astype(jnp.float32))
+        y_inter = jnp.einsum("bin,bih,bhpn->bihp", C_c.astype(jnp.float32),
+                             jnp.exp(cum), h.astype(jnp.float32))
+        h_new = (h * jnp.exp(cum[:, -1, :])[:, :, None, None].astype(h.dtype)
+                 + s_c.astype(h.dtype))
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    h_init = (jnp.zeros((Bb, H, P, N), jnp.float32) if h0 is None else h0)
+    h_last, ys = jax.lax.scan(step, h_init, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bb, S, H, P)
+    return y, h_last
+
+
+def mamba2_apply(p: dict, x: jax.Array, cfg: ModelConfig,
+                 state: dict | None = None, return_state: bool = False):
+    """One Mamba-2 block (params already layer-indexed).  x: (B,S,D).
+
+    With ``return_state`` also returns {"conv", "ssm"} carry for continuing
+    generation after a prefill.  ``state`` seeds the recurrence (h0 + conv
+    history); None means zero state.
+    """
+    B, S, D = x.shape
+    di, N = d_inner(cfg), cfg.ssm_state
+    H, P = n_ssm_heads(cfg), cfg.ssm_head_dim
+
+    zxbcdt = x @ p["in_proj"]
+    z, xs, Bc, Cc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N],
+                                  axis=-1)
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xs, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    chunk = min(cfg.ssm_chunk, S)
+    if S % chunk:
+        chunk = S
+    h0 = state["ssm"] if state is not None else None
+    y, h_last = ssd_chunked(xs.reshape(B, S, H, P), dt, A, Bc, Cc, chunk, h0=h0)
+    y = y + p["D_skip"][None, None, :, None].astype(y.dtype) * xs.reshape(B, S, H, P)
+    y = y.reshape(B, S, di)
+    y = nn.rmsnorm(y, p["gamma"], cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if return_state:
+        K = cfg.ssm_conv
+        new_state = {"conv": conv_in[:, -(K - 1):, :], "ssm": h_last}
+        return out, new_state
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent) path
+# ---------------------------------------------------------------------------
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, n_stack: int, dtype):
+    di, N = d_inner(cfg), cfg.ssm_state
+    H, P = n_ssm_heads(cfg), cfg.ssm_head_dim
+    conv_dim = di + 2 * N
+    return {
+        "conv": jnp.zeros((n_stack, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((n_stack, batch, H, P, N), dtype),
+    }
+
+
+def mamba2_decode_step(p: dict, x: jax.Array, state: dict, cfg: ModelConfig):
+    """x: (B,1,D); state (single layer): conv (B,K-1,C), ssm (B,H,P,N)."""
+    B = x.shape[0]
+    di, N = d_inner(cfg), cfg.ssm_state
+    H, P = n_ssm_heads(cfg), cfg.ssm_head_dim
+
+    zxbcdt = x[:, 0] @ p["in_proj"]
+    z, xs, Bc, Cc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N],
+                                  axis=-1)
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)         # (B,C)
+    window = jnp.concatenate([state["conv"], conv_in[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * A[None, :])                            # (B,H)
+    xh = xs.reshape(B, H, P)
+    h = state["ssm"] * da[:, :, None, None].astype(state["ssm"].dtype) + \
+        jnp.einsum("bn,bhp,bh->bhpn", Bc, xh, dt.astype(xh.dtype))
+    y = jnp.einsum("bn,bhpn->bhp", Cc, h)
+    y = y + p["D_skip"][None, :, None].astype(y.dtype) * xh
+    y = y.reshape(B, di).astype(x.dtype)
+    y = nn.rmsnorm(y, p["gamma"], cfg.norm_eps) * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None, :].astype(x.dtype)
+    new_state = {"conv": window[:, 1:], "ssm": h.astype(state["ssm"].dtype)}
+    return out, new_state

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts FFN with sort-based (dropped-token) dispatch.
+
+TPU adaptation note (DESIGN.md §Hardware-adaptation): GPU MoE stacks
+(MegaBlocks/DeepSpeed-MoE) use CSR block-sparse GEMMs; the TPU-native
+equivalent is fixed-capacity grouped matmul: argsort tokens by expert id,
+scatter into an (E, capacity, D) buffer, and run one batched einsum over the
+expert dimension so the MXU sees dense tiles.  Expert parallelism is
+expressed purely through shardings (experts sharded over the "model"/expert
+mesh axis); GSPMD inserts the all-to-alls.
+
+Dispatch is chunked over tokens (``token_chunk``) so the capacity buffer
+stays small at 1M-token batches.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+from repro.parallel.axes import shard
+
+
+def moe_init(key, cfg: ModelConfig, n_stack: int, dtype) -> dict:
+    """Stacked (over layers) MoE params: router + expert FFNs + shared experts."""
+    ks = jax.random.split(key, 4)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    gated = cfg.act in ("swiglu", "geglu")
+    fin = 2 * F if gated else F
+    p = {
+        "router": nn.stacked_dense_init(ks[0], n_stack, D, E, jnp.float32, scale=0.02),
+        "we_in": (jax.random.normal(ks[1], (n_stack, E, D, fin), jnp.float32)
+                  / jnp.sqrt(D)).astype(dtype),
+        "we_out": (jax.random.normal(ks[2], (n_stack, E, F, D), jnp.float32)
+                   / jnp.sqrt(F)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = nn.ffn_init(
+            ks[3], D, F * cfg.n_shared_experts, cfg.act, dtype, n_stack=n_stack)
+    return p
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig, token_chunk: int = 65536):
+    """x: (B, S, D) -> (out, aux_loss).  ``p`` holds ONE layer's params
+    (leading layer dim already indexed out by the scan)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xf = x.reshape(T, D)
+
+    chunk = min(token_chunk, T)
+    if T % chunk:
+        chunk = T
+    n_chunks = T // chunk
+    capacity = max(8, int(cfg.capacity_factor * chunk * K / E))
+    # keep the MXU dimension aligned
+    capacity = -(-capacity // 8) * 8
+
+    def one_chunk(xc):
+        # xc: (chunk, D).  Keep the dispatch chunk REPLICATED: the scatter
+        # into the expert-sharded capacity buffer is then shard-local (each
+        # model shard writes only its experts), instead of GSPMD moving the
+        # whole buffer (§Perf hillclimb, deepseek-v3 collective term).
+        xc = shard(xc, None, None)
+        logits = (xc.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)               # (chunk, E)
+        gates, eidx = jax.lax.top_k(probs, K)                  # (chunk, K)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+        # Load-balancing aux loss (Switch-style) over this chunk.
+        me = jnp.mean(probs, axis=0)                            # (E,)
+        ce = jnp.mean(
+            (jax.nn.one_hot(eidx, E).sum(1) > 0).astype(jnp.float32), axis=0)
+        aux = E * jnp.sum(me * ce)
+
+        flat_e = eidx.reshape(-1)                               # (chunk*K,)
+        order = jnp.argsort(flat_e)                             # stable
+        sorted_e = flat_e[order]
+        tok_of = order // K                                     # token per slot
+        pos = jnp.arange(chunk * K) - jnp.searchsorted(
+            sorted_e, sorted_e, side="left")                    # rank within expert
+        keep = pos < capacity
+        # dropped entries land in a per-expert TRASH slot (index `capacity`)
+        # so they can never overwrite a live token's slot.
+        pos_t = jnp.where(keep, pos, capacity)
+
+        buf = jnp.zeros((E, capacity + 1, D), xc.dtype)
+        buf = buf.at[sorted_e, pos_t].set(xc[tok_of])[:, :capacity]
+        buf = shard(buf, "experts", None, None)
+
+        h = jnp.einsum("ecd,edf->ecf", buf, p["we_in"])
+        if cfg.act in ("swiglu", "geglu"):
+            u, g = jnp.split(h, 2, axis=-1)
+            h = u * (jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g))
+        else:
+            h = nn.act_fn(cfg.act)(h)
+        out_buf = jnp.einsum("ecf,efd->ecd", h, p["we_out"])
+        out_buf = shard(out_buf, "experts", None, None)
+
+        # Combine via slot→token scatter-add from the EXPERT-SHARDED side:
+        # each model shard scatter-adds only its local experts' slots into a
+        # partial (chunk, D) output, and GSPMD all-reduces that — 1.9 GB —
+        # instead of all-reducing the pre-combine (chunk·K, D) gather
+        # (§Perf hillclimb: 112 TB → ~7 TB of collectives on deepseek-v3).
+        gate_sorted = gates.reshape(-1)[order]
+        tok_slot = jnp.zeros((E, capacity + 1), jnp.int32) \
+            .at[sorted_e, pos_t].set(tok_of)[:, :capacity]
+        gate_slot = jnp.zeros((E, capacity + 1), jnp.float32) \
+            .at[sorted_e, pos_t].set(gate_sorted)[:, :capacity]
+        tok_slot = shard(tok_slot, "experts", None)
+        gate_slot = shard(gate_slot, "experts", None)
+        yc = jnp.zeros((chunk, D), jnp.float32)
+        yc = yc.at[tok_slot.reshape(-1)].add(
+            out_buf.reshape(E * capacity, D).astype(jnp.float32)
+            * gate_slot.reshape(-1)[:, None])
+        return yc.astype(x.dtype), aux
+
+    if n_chunks == 1:
+        y, aux = one_chunk(xf)
+    else:
+        ys, auxs = jax.lax.map(one_chunk, xf.reshape(n_chunks, chunk, D))
+        y, aux = ys.reshape(T, D), jnp.mean(auxs)
+
+    if "shared" in p:
+        y = y + nn.ffn_apply(p["shared"], xf, cfg.act)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,165 @@
+"""Core neural-net primitives (pure JAX, functional).
+
+Parameters are plain nested dicts of jnp arrays.  Initializers are pure
+functions of a PRNG key so the whole ``init`` can be run under
+``jax.eval_shape`` for allocation-free dry-runs.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def stacked_dense_init(key, n: int, in_dim: int, out_dim: int, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (n, in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / FFN
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    return {
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "relu": jax.nn.relu,
+        "sqrelu": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+def ffn_init(key, d_model: int, d_ff: int, act: str, dtype, n_stack: int = 0) -> Params:
+    k1, k2 = jax.random.split(key)
+    gated = act in ("swiglu", "geglu")
+    in_w = 2 * d_ff if gated else d_ff
+    if n_stack:
+        return {
+            "wi": stacked_dense_init(k1, n_stack, d_model, in_w, dtype),
+            "wo": stacked_dense_init(k2, n_stack, d_ff, d_model, dtype),
+        }
+    return {
+        "wi": dense_init(k1, d_model, in_w, dtype),
+        "wo": dense_init(k2, d_ff, d_model, dtype),
+    }
+
+
+def ffn_apply(p: Params, x: jax.Array, act: str) -> jax.Array:
+    """x: (..., d_model). Gated (SwiGLU/GeGLU) or plain MLP."""
+    from repro.parallel.axes import shard
+
+    h = x @ p["wi"]
+    if act in ("swiglu", "geglu"):
+        u, g = jnp.split(h, 2, axis=-1)
+        inner = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        h = u * inner
+    else:
+        h = act_fn(act)(h)
+    if h.ndim == 3:
+        h = shard(h, "batch", "seq", "ffn")
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, dh), positions: (B, S) or (S,). Rotates pairs (even|odd halves)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / loss
+# ---------------------------------------------------------------------------
+
+def embed_lookup(emb: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(emb, tokens, axis=0)
+
+
+def cross_entropy_loss(
+    logits_fn,
+    hidden: jax.Array,
+    labels: jax.Array,
+    mask: jax.Array | None = None,
+    chunk: int = 0,
+) -> jax.Array:
+    """Next-token CE.  ``logits_fn(h_chunk) -> (..., V)``.
+
+    ``chunk`` > 0 evaluates the vocab projection + CE in sequence chunks via
+    ``lax.map`` so the full (B, S, V) f32 logits tensor is never materialized
+    (critical for 150k–256k vocabs at long sequence lengths).
+    """
+    B, S, _ = hidden.shape
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+
+    def chunk_loss(h, y, m):
+        logits = logits_fn(h).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - gold) * m), jnp.sum(m)
+
+    if chunk and S > chunk and S % chunk == 0:
+        n = S // chunk
+        h = hidden.reshape(B, n, chunk, -1).swapaxes(0, 1)
+        y = labels.reshape(B, n, chunk).swapaxes(0, 1)
+        m = mask.reshape(B, n, chunk).swapaxes(0, 1)
+        tot, cnt = jax.lax.map(lambda args: chunk_loss(*args), (h, y, m))
+        return jnp.sum(tot) / jnp.maximum(jnp.sum(cnt), 1.0)
+    tot, cnt = chunk_loss(hidden, labels, mask)
+    return tot / jnp.maximum(cnt, 1.0)

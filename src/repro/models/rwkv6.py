@@ -1,0 +1,164 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892) block in pure JAX.
+
+Time-mix with data-dependent decay (LoRA-produced per-token w), 5-way
+token-shift interpolation (ddlerp), per-head WKV linear recurrence, and a
+squared-ReLU channel-mix.  The WKV recurrence is computed chunk-parallel with
+a stabilized intra-chunk decay matrix (all exponent differences ≤ 0); the
+chunked jnp path is the model path and the oracle for the Pallas kernel in
+``repro/kernels/wkv6.py``.
+
+Recurrence per head (dk = dv = head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+
+MIX_NAMES = ("r", "k", "v", "w", "g")
+
+
+def n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def rwkv6_init(key, cfg: ModelConfig, n_stack: int, dtype) -> dict:
+    ks = jax.random.split(key, 12)
+    D, hd = cfg.d_model, cfg.rwkv_head_dim
+    H = n_heads(cfg)
+    rm, rd = cfg.rwkv_lora_mix, cfg.rwkv_lora_decay
+    tm = {
+        "mu_base": (jax.random.uniform(ks[0], (n_stack, D), jnp.float32)).astype(dtype),
+        "mu": (jax.random.uniform(ks[1], (n_stack, 5, D), jnp.float32)).astype(dtype),
+        "mix_a": nn.stacked_dense_init(ks[2], n_stack, D, 5 * rm, dtype, scale=0.01),
+        "mix_b": (jax.random.normal(ks[3], (n_stack, 5, rm, D), jnp.float32)
+                  * 0.01).astype(dtype),
+        "wr": nn.stacked_dense_init(ks[4], n_stack, D, D, dtype),
+        "wk": nn.stacked_dense_init(ks[5], n_stack, D, D, dtype),
+        "wv": nn.stacked_dense_init(ks[6], n_stack, D, D, dtype),
+        "wg": nn.stacked_dense_init(ks[7], n_stack, D, D, dtype),
+        "w0": jnp.full((n_stack, D), -2.0, jnp.float32),
+        "decay_a": nn.stacked_dense_init(ks[8], n_stack, D, rd, dtype, scale=0.01),
+        "decay_b": (jax.random.normal(ks[9], (n_stack, rd, D), jnp.float32)
+                    * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[10], (n_stack, H, hd), jnp.float32) * 0.1),
+        "ln_g": jnp.ones((n_stack, D), jnp.float32),
+        "ln_b": jnp.zeros((n_stack, D), jnp.float32),
+        "wo": nn.stacked_dense_init(ks[11], n_stack, D, D, dtype),
+    }
+    kc = jax.random.split(ks[11], 3)
+    cm = {
+        "mu_k": (jax.random.uniform(kc[0], (n_stack, D), jnp.float32)).astype(dtype),
+        "mu_r": (jax.random.uniform(kc[1], (n_stack, D), jnp.float32)).astype(dtype),
+        "wk": nn.stacked_dense_init(kc[0], n_stack, D, cfg.d_ff, dtype),
+        "wv": nn.stacked_dense_init(kc[1], n_stack, cfg.d_ff, D, dtype),
+        "wr": nn.stacked_dense_init(kc[2], n_stack, D, D, dtype),
+    }
+    return {"tm": tm, "cm": cm}
+
+
+def _token_shift(x, last):
+    """shifted[t] = x[t-1]; shifted[0] = last (B,D) or zeros."""
+    prev = jnp.roll(x, 1, axis=1)
+    first = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return jnp.concatenate([first, prev[:, 1:]], axis=1)
+
+
+def _ddlerp(p, x, shifted):
+    """5-way data-dependent interpolation.  Returns dict name->(B,S,D)."""
+    dx = shifted - x
+    base = x + dx * p["mu_base"]
+    lora = jnp.tanh(base @ p["mix_a"])                       # (B,S,5*rm)
+    lora = lora.reshape(*lora.shape[:-1], 5, -1)
+    delta = jnp.einsum("bsfr,frd->bsfd", lora, p["mix_b"])   # (B,S,5,D)
+    out = {}
+    for i, name in enumerate(MIX_NAMES):
+        out[name] = x + dx * (p["mu"][i] + delta[:, :, i])
+    return out
+
+
+def wkv_chunked(r, k, v, logw, u, chunk: int, s0=None):
+    """Chunk-parallel WKV.  r,k,v: (B,S,H,hd); logw: (B,S,H,hd) (≤0 f32);
+    u: (H,hd).  Returns (y (B,S,H,hd) f32, S_last (B,H,hd,hd) f32)."""
+    B, S, H, hd = r.shape
+    nc = S // chunk
+    assert S % chunk == 0
+
+    def to_chunks(t):
+        return t.reshape(B, nc, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    rf = to_chunks(r.astype(jnp.float32))
+    kf = to_chunks(k.astype(jnp.float32))
+    vf = to_chunks(v.astype(jnp.float32))
+    wf = to_chunks(logw.astype(jnp.float32))
+    mask_lt = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def step(S_, inp):
+        rc, kc, vc, wc = inp                                 # (B,Q,H,hd)
+        cw = jnp.cumsum(wc, axis=1)                          # inclusive
+        # intra: y_t += sum_{i<t} (r_t ⊙ e^{cw_{t-1}-cw_i}) · k_i  v_i
+        #   exponent = cw[t] - w[t] - cw[i]  (≤ 0 for i ≤ t-1: stable)
+        expo = (cw - wc)[:, :, None, :, :] - cw[:, None, :, :, :]  # (B,T,I,H,hd)
+        m5 = mask_lt[None, :, :, None, None]
+        # double-where against 0·inf NaNs in the cotangent (masked entries
+        # have positive exponents)
+        dec = jnp.where(m5, jnp.exp(jnp.where(m5, expo, 0.0)), 0.0)
+        att = jnp.einsum("bthd,btihd,bihd->btih", rc, dec, kc)
+        # diagonal bonus term u
+        diag = jnp.einsum("bthd,hd,bthd->bth", rc, u, kc)
+        y = jnp.einsum("btih,bihd->bthd", att, vc)
+        y = y + diag[..., None] * vc
+        # inter: y_t += (r_t ⊙ e^{cw_t - w_t}) S_prev
+        rdec = rc * jnp.exp(cw - wc)
+        y = y + jnp.einsum("bthk,bhkv->bthv", rdec, S_)
+        # state update: S = diag(e^{cw_last}) S + sum_i e^{cw_last - cw_i} k_i ⊗ v_i
+        kdec = kc * jnp.exp(cw[:, -1:, :, :] - cw)
+        S_new = S_ * jnp.exp(cw[:, -1, :, :])[..., None] + \
+            jnp.einsum("bihk,bihv->bhkv", kdec, vc)
+        return S_new, y
+
+    S_init = jnp.zeros((B, H, hd, hd), jnp.float32) if s0 is None else s0
+    S_last, ys = jax.lax.scan(step, S_init, (rf, kf, vf, wf))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return y, S_last
+
+
+def time_mix(p, x, cfg: ModelConfig, shift_last=None, wkv_state=None):
+    """RWKV-6 attention replacement.  x: (B,S,D) (already layer-normed)."""
+    B, S, D = x.shape
+    H, hd = n_heads(cfg), cfg.rwkv_head_dim
+    mixed = _ddlerp(p, x, _token_shift(x, shift_last))
+    r = (mixed["r"] @ p["wr"]).reshape(B, S, H, hd)
+    k = (mixed["k"] @ p["wk"]).reshape(B, S, H, hd)
+    v = (mixed["v"] @ p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(mixed["g"] @ p["wg"])
+    logw = -jnp.exp(
+        p["w0"].astype(jnp.float32)
+        + (jnp.tanh(mixed["w"] @ p["decay_a"]) @ p["decay_b"]).astype(jnp.float32)
+    ).reshape(B, S, H, hd)
+
+    chunk = min(32, S)
+    if S % chunk:
+        chunk = S
+    y, new_state = wkv_chunked(r, k, v, logw, p["u"], chunk, wkv_state)
+    # per-head group norm
+    y = y.reshape(B, S, H, hd)
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(B, S, D) * p["ln_g"] + p["ln_b"]
+    y = (y.astype(x.dtype) * g) @ p["wo"]
+    return y, x[:, -1, :], new_state
+
+
+def channel_mix(p, x, shift_last=None):
+    shifted = _token_shift(x, shift_last)
+    xk = x + (shifted - x) * p["mu_k"]
+    xr = x + (shifted - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"]), x[:, -1, :]

@@ -1,0 +1,133 @@
+"""RWKV-6 full model assembly (attention-free LM)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn, rwkv6
+from repro.models.transformer import ModelOpts
+from repro.parallel.axes import shard
+
+
+def rwkv_init(key, cfg: ModelConfig, dtype=None) -> dict:
+    dtype = dtype or nn.dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    L = cfg.n_layers
+    return {
+        "emb": nn.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "ln0_g": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln0_b": jnp.zeros((cfg.d_model,), jnp.float32),
+        "layers": {
+            "ln1_g": jnp.ones((L, cfg.d_model), jnp.float32),
+            "ln1_b": jnp.zeros((L, cfg.d_model), jnp.float32),
+            "ln2_g": jnp.ones((L, cfg.d_model), jnp.float32),
+            "ln2_b": jnp.zeros((L, cfg.d_model), jnp.float32),
+            **rwkv6.rwkv6_init(ks[1], cfg, L, dtype),
+        },
+        "ln_f_g": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln_f_b": jnp.zeros((cfg.d_model,), jnp.float32),
+        "head": nn.dense_init(ks[2], cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def _layer(lp, x, cfg, opts, state=None):
+    """One RWKV block.  state: None (train) or per-layer decode state."""
+    h = nn.layernorm(x, lp["ln1_g"], lp["ln1_b"], cfg.norm_eps)
+    tm_state = None if state is None else state
+    y, tm_shift, wkv = rwkv6.time_mix(
+        lp["tm"], h, cfg,
+        shift_last=None if state is None else state["tm_shift"],
+        wkv_state=None if state is None else state["wkv"])
+    x = x + y
+    h = nn.layernorm(x, lp["ln2_g"], lp["ln2_b"], cfg.norm_eps)
+    y, cm_shift = rwkv6.channel_mix(
+        lp["cm"], h, shift_last=None if state is None else state["cm_shift"])
+    x = x + y
+    new_state = {"tm_shift": tm_shift, "cm_shift": cm_shift, "wkv": wkv}
+    return x, new_state
+
+
+def rwkv_forward(params, batch, cfg: ModelConfig, opts: ModelOpts):
+    x = nn.embed_lookup(params["emb"], batch["tokens"])
+    x = shard(x, "batch", "seq", "embed")
+    x = nn.layernorm(x, params["ln0_g"], params["ln0_b"], cfg.norm_eps)
+
+    def body(x, lp):
+        x, _ = _layer(lp, x, cfg, opts)
+        return x, None
+
+    body = jax.checkpoint(body) if opts.remat == "full" else body
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return nn.layernorm(x, params["ln_f_g"], params["ln_f_b"], cfg.norm_eps)
+
+
+def rwkv_loss(params, batch, cfg: ModelConfig, opts: ModelOpts):
+    tokens = batch["tokens"]
+    h = rwkv_forward(params, batch, cfg, opts)
+    labels = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+    loss = nn.cross_entropy_loss(lambda hh: hh @ params["head"], h, labels,
+                                 mask, chunk=opts.loss_chunk)
+    return loss, {"ce": loss}
+
+
+def rwkv_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or nn.dtype_of(cfg.dtype)
+    L, D = cfg.n_layers, cfg.d_model
+    H, hd = rwkv6.n_heads(cfg), cfg.rwkv_head_dim
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "tm_shift": jnp.zeros((L, batch, D), dtype),
+        "cm_shift": jnp.zeros((L, batch, D), dtype),
+        "wkv": jnp.zeros((L, batch, H, hd, hd), jnp.float32),
+    }
+
+
+def _stack_pass(params, cache, x, cfg, opts):
+    """Scan layers threading per-layer recurrent state (S≥1 tokens)."""
+    def body(carry, i):
+        x, tm_s, cm_s, wkv = carry
+        lp = jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(
+            a, i, 0, keepdims=False), params["layers"])
+        st = {
+            "tm_shift": jax.lax.dynamic_index_in_dim(tm_s, i, 0, keepdims=False),
+            "cm_shift": jax.lax.dynamic_index_in_dim(cm_s, i, 0, keepdims=False),
+            "wkv": jax.lax.dynamic_index_in_dim(wkv, i, 0, keepdims=False),
+        }
+        x, ns = _layer(lp, x, cfg, opts, state=st)
+        tm_s = jax.lax.dynamic_update_index_in_dim(
+            tm_s, ns["tm_shift"].astype(tm_s.dtype), i, 0)
+        cm_s = jax.lax.dynamic_update_index_in_dim(
+            cm_s, ns["cm_shift"].astype(cm_s.dtype), i, 0)
+        wkv = jax.lax.dynamic_update_index_in_dim(wkv, ns["wkv"], i, 0)
+        return (x, tm_s, cm_s, wkv), None
+
+    (x, tm_s, cm_s, wkv), _ = jax.lax.scan(
+        body, (x, cache["tm_shift"], cache["cm_shift"], cache["wkv"]),
+        jnp.arange(cfg.n_layers))
+    return x, tm_s, cm_s, wkv
+
+
+def rwkv_decode_step(params, cache, tokens, cfg: ModelConfig, opts: ModelOpts):
+    x = nn.embed_lookup(params["emb"], tokens[:, None])
+    x = nn.layernorm(x, params["ln0_g"], params["ln0_b"], cfg.norm_eps)
+    x, tm_s, cm_s, wkv = _stack_pass(params, cache, x, cfg, opts)
+    x = nn.layernorm(x, params["ln_f_g"], params["ln_f_b"], cfg.norm_eps)
+    logits = x[:, 0] @ params["head"]
+    new_cache = {"pos": cache["pos"] + 1, "tm_shift": tm_s, "cm_shift": cm_s,
+                 "wkv": wkv}
+    return new_cache, logits
+
+
+def rwkv_prefill(params, cache, batch, cfg: ModelConfig, opts: ModelOpts):
+    tokens = batch["tokens"]
+    x = nn.embed_lookup(params["emb"], tokens)
+    x = nn.layernorm(x, params["ln0_g"], params["ln0_b"], cfg.norm_eps)
+    x, tm_s, cm_s, wkv = _stack_pass(params, cache, x, cfg, opts)
+    x = nn.layernorm(x, params["ln_f_g"], params["ln_f_b"], cfg.norm_eps)
+    logits = x[:, -1] @ params["head"]
+    new_cache = {"pos": jnp.asarray(tokens.shape[1], jnp.int32),
+                 "tm_shift": tm_s, "cm_shift": cm_s, "wkv": wkv}
+    return new_cache, logits

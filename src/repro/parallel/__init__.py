@@ -1,0 +1,3 @@
+from repro.parallel.axes import logical_axis_rules, shard
+
+__all__ = ["logical_axis_rules", "shard"]

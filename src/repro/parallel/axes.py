@@ -1,0 +1,90 @@
+"""Logical-axis → mesh-axis mapping for activation sharding.
+
+Models are written against *logical* axis names ("batch", "seq", "heads",
+"embed", ...).  The parallel runtime installs a rule set mapping logical
+names to physical mesh axes; :func:`shard` then applies
+``jax.lax.with_sharding_constraint``.  Outside any rule context (e.g. pure
+single-device smoke tests) :func:`shard` is a no-op, so the model code is
+mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Iterator, Mapping, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> Mapping[str, tuple[str, ...] | None] | None:
+    return getattr(_state, "rules", None)
+
+
+@contextmanager
+def logical_axis_rules(
+    rules: Mapping[str, tuple[str, ...] | str | None],
+    axis_sizes: Mapping[str, int] | None = None,
+) -> Iterator[None]:
+    """Install logical→mesh axis rules for the duration of the context.
+
+    ``axis_sizes`` (mesh axis → size) enables divisibility checks: a rule is
+    silently dropped for a tensor dim it does not divide (e.g. kv_heads=1
+    under MQA can't shard over a 16-way model axis)."""
+    norm: dict[str, tuple[str, ...] | None] = {}
+    for k, v in rules.items():
+        if v is None:
+            norm[k] = None
+        elif isinstance(v, str):
+            norm[k] = (v,)
+        else:
+            norm[k] = tuple(v)
+    prev = _rules()
+    prev_sizes = getattr(_state, "sizes", None)
+    _state.rules = norm
+    _state.sizes = dict(axis_sizes) if axis_sizes else None
+    try:
+        yield
+    finally:
+        _state.rules = prev
+        _state.sizes = prev_sizes
+
+
+def logical_to_spec(names: Sequence[str | None],
+                    dims: Sequence[int] | None = None) -> P:
+    """Translate logical axis names to a PartitionSpec under current rules."""
+    rules = _rules()
+    if rules is None:
+        return P()
+    sizes = getattr(_state, "sizes", None)
+    parts = []
+    used: set[str] = set()
+    for i, name in enumerate(names):
+        axes = rules.get(name) if name is not None else None
+        if axes is None:
+            parts.append(None)
+            continue
+        free = tuple(a for a in axes if a not in used)
+        if free and sizes is not None and dims is not None:
+            n = 1
+            for a in free:
+                n *= sizes.get(a, 1)
+            if n == 0 or dims[i] % n != 0:
+                parts.append(None)
+                continue
+        used.update(free)
+        parts.append(free if free else None)
+    return P(*parts)
+
+
+def shard(x: jax.Array, *names: str | None) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (no-op w/o rules)."""
+    rules = _rules()
+    if rules is None:
+        return x
+    if x.ndim != len(names):
+        raise ValueError(f"shard(): rank {x.ndim} != {len(names)} names {names}")
+    return jax.lax.with_sharding_constraint(x, logical_to_spec(names, x.shape))

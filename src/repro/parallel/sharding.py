@@ -1,0 +1,278 @@
+"""ExecutionPlan → GSPMD sharding compiler.
+
+Translates a plan into:
+  * parameter PartitionSpecs (name/shape rule table: column/row tensor
+    parallelism, expert parallelism, vocab-sharded embeddings, FSDP);
+  * optimizer-state specs (ZeRO-1 sharding over the data axes, optional
+    ``pinned_host`` placement = the TPU analogue of ZeRO-Offload);
+  * activation logical-axis rules for ``repro.parallel.axes.shard``;
+  * decode-cache specs (batch over data axes; heads or sequence over model).
+
+Every rule checks divisibility against the mesh before applying an axis, so
+any (architecture × mesh) combination lowers without manual tables.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.plan import ExecutionPlan
+
+# Leaf-name rule tables.  COL: shard output dim over "model"; ROW: input dim.
+_COL = {"wq", "wk", "wv", "wqkv", "wi", "wg", "q_a", "q_b", "kv_a", "kv_b",
+        "mix_a", "decay_a", "decay_b", "mix_b", "head", "patch_proj",
+        "frame_proj", "wr"}
+_ROW = {"wo", "out_proj"}
+_EXPERT = {"we_in", "we_out"}
+_REPLICATED = {"router", "conv_w", "conv_b", "in_proj", "A_log", "D_skip",
+               "dt_bias", "enc_pos"}
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_axes(mesh: Mesh, plan: ExecutionPlan) -> tuple[str, ...]:
+    """Axes carrying data parallelism.  With tp==1 the model axis would sit
+    idle, so DP/FSDP spans it too (pure-DP plans use the full machine)."""
+    ax = data_axes(mesh)
+    if plan.tp == 1 and "model" in mesh.axis_names:
+        ax = ax + ("model",)
+    return ax
+
+
+def axis_size(mesh: Mesh, axes: tuple[str, ...] | str | None) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(spec_parts: list, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop axes that don't divide the corresponding dim."""
+    out = []
+    for dim, part in zip(shape, spec_parts):
+        if part is None:
+            out.append(None)
+            continue
+        axes = (part,) if isinstance(part, str) else tuple(part)
+        if axes and dim % axis_size(mesh, axes) == 0:
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _base_spec(path: tuple[str, ...], shape: tuple[int, ...],
+               mesh: Mesh, plan: ExecutionPlan) -> P:
+    """TP/EP spec for one param leaf (before FSDP)."""
+    name = path[-1]
+    nd = len(shape)
+    model = "model" if ("model" in mesh.axis_names and plan.tp > 1) else None
+
+    def last2(in_axis, out_axis):
+        parts = [None] * nd
+        if nd >= 2:
+            parts[-2], parts[-1] = in_axis, out_axis
+        elif nd == 1:
+            parts[-1] = out_axis
+        return parts
+
+    if name == "emb":
+        return _fit([model, None], shape, mesh)
+    if name in _EXPERT:
+        parts = [None] * nd
+        parts[-3] = model                      # expert dim
+        return _fit(parts, shape, mesh)
+    if name in _REPLICATED or model is None or nd == 0:
+        return P(*([None] * nd))
+    if name in _ROW:
+        return _fit(last2(model, None), shape, mesh)
+    if name in _COL:
+        # rwkv channel-mix wv is (F, D): row-parallel despite the name
+        if name == "wv" and "cm" in path:
+            return _fit(last2(model, None), shape, mesh)
+        return _fit(last2(None, model), shape, mesh)
+    if name == "u":                            # rwkv bonus (·,H,hd)
+        parts = [None] * nd
+        if nd >= 2:
+            parts[-2] = model
+        return _fit(parts, shape, mesh)
+    return P(*([None] * nd))
+
+
+_STACKED_GROUPS = ("layers", "dense_layers", "moe_layers", "ssm_layers",
+                   "enc_layers", "dec_layers", "mixer", "tm", "cm")
+
+
+def _is_stacked(path: tuple[str, ...]) -> bool:
+    return any(p in _STACKED_GROUPS for p in path[:-1])
+
+
+def _add_fsdp(spec: P, path, shape, mesh: Mesh, plan: ExecutionPlan) -> P:
+    """Shard the largest free dim over the data axes (ZeRO-3/FSDP)."""
+    daxes = batch_axes(mesh, plan)
+    dsz = axis_size(mesh, daxes)
+    if dsz == 1:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    start = 1 if (_is_stacked(path) and len(shape) >= 3) else 0
+    best, best_dim = None, -1
+    for i in range(start, len(shape)):
+        if parts[i] is None and shape[i] % dsz == 0 and shape[i] > best_dim:
+            best, best_dim = i, shape[i]
+    if best is not None:
+        parts[best] = daxes if len(daxes) > 1 else daxes[0]
+    return P(*parts)
+
+
+def param_specs(param_shapes: Any, mesh: Mesh, plan: ExecutionPlan) -> Any:
+    """PartitionSpec pytree for the params (shapes tree or ShapeDtypeStructs)."""
+    def one(path, leaf):
+        names = tuple(_key_name(k) for k in path)
+        spec = _base_spec(names, leaf.shape, mesh, plan)
+        if plan.zero_stage == 3:
+            spec = _add_fsdp(spec, names, leaf.shape, mesh, plan)
+        return spec
+    return _tree_map_with_path(one, param_shapes)
+
+
+def opt_state_specs(param_shapes: Any, mesh: Mesh, plan: ExecutionPlan) -> Any:
+    """Optimizer-moment specs: param spec + ZeRO-1 data-axis sharding."""
+    def one(path, leaf):
+        names = tuple(_key_name(k) for k in path)
+        spec = _base_spec(names, leaf.shape, mesh, plan)
+        if plan.zero_stage >= 1:
+            spec = _add_fsdp(spec, names, leaf.shape, mesh, plan)
+        return spec
+    return _tree_map_with_path(one, param_shapes)
+
+
+def opt_sharding(spec: P, mesh: Mesh, plan: ExecutionPlan) -> NamedSharding:
+    """NamedSharding for one optimizer leaf; host memory when offloading."""
+    if plan.offload:
+        return NamedSharding(mesh, spec, memory_kind="pinned_host")
+    return NamedSharding(mesh, spec)
+
+
+# ---------------------------------------------------------------------------
+# Activation rules / batch / cache specs
+# ---------------------------------------------------------------------------
+
+def activation_rules(mesh: Mesh, plan: ExecutionPlan) -> dict:
+    daxes = batch_axes(mesh, plan)
+    model = ("model",) if ("model" in mesh.axis_names and plan.tp > 1) else None
+    return {
+        "batch": daxes,
+        "seq": model if plan.sp else None,
+        "embed": None,
+        "heads": model,
+        "kv_heads": model,
+        "ffn": model,
+        "experts": model,
+        "vocab": model,
+    }
+
+
+def batch_specs(batch_tree: Any, mesh: Mesh, plan: ExecutionPlan) -> Any:
+    daxes = batch_axes(mesh, plan)
+
+    def one(leaf):
+        parts = [None] * len(leaf.shape)
+        # use the longest prefix of batch axes that divides the batch dim
+        ax = list(daxes)
+        while ax and (not parts or leaf.shape[0] % axis_size(mesh, tuple(ax))):
+            ax.pop()
+        if parts and ax:
+            parts[0] = tuple(ax) if len(ax) > 1 else ax[0]
+        return P(*parts)
+    return jax.tree.map(one, batch_tree)
+
+
+_CACHE_KV = {"k", "v", "self_k", "self_v", "cross_k", "cross_v"}
+
+
+def cache_specs(cache_shapes: Any, mesh: Mesh, plan: ExecutionPlan) -> Any:
+    """Decode-state specs.  KV caches: (stack, B, S, H, hd) — batch over data
+    (falling back to S when batch doesn't divide), heads over model (falling
+    back to S).  MLA latents: (stack, B, S, r) — S over model."""
+    all_b = batch_axes(mesh, plan)
+    model = "model" if "model" in mesh.axis_names and plan.tp > 1 else None
+    msz = axis_size(mesh, model)
+
+    def fit_batch(dim: int):
+        ax = list(all_b)
+        while ax and dim % axis_size(mesh, tuple(ax)):
+            ax.pop()
+        if not ax or axis_size(mesh, tuple(ax)) == 1:
+            return None, 1
+        return (tuple(ax) if len(ax) > 1 else ax[0]), axis_size(mesh, tuple(ax))
+
+    def one(path, leaf):
+        names = tuple(_key_name(k) for k in path)
+        name, shape = names[-1], leaf.shape
+        nd = len(shape)
+        parts = [None] * nd
+        if nd == 0:
+            return P()
+        if name in _CACHE_KV and nd == 5:
+            _, B, S, H, _ = shape
+            bspec, bsz = fit_batch(B)
+            parts[1] = bspec
+            if model and H % msz == 0:
+                parts[3] = model
+            elif model and S % msz == 0:
+                parts[2] = model
+            if bsz == 1 and parts[2] is None:
+                # batch unshardable (e.g. long_500k B=1): shard S over the
+                # unused axes instead (flash-decoding split-KV style)
+                used = {parts[3]} if parts[3] else set()
+                rem = tuple(a for a in all_b if a not in used)
+                if rem and S % axis_size(mesh, rem) == 0 \
+                        and axis_size(mesh, rem) > 1:
+                    parts[2] = rem if len(rem) > 1 else rem[0]
+            return P(*parts)
+        if name in ("c", "pe") and nd == 4:                 # MLA latents
+            _, B, S, _ = shape
+            bspec, bsz = fit_batch(B)
+            parts[1] = bspec
+            if model and S % msz == 0:
+                parts[2] = model
+            return P(*parts)
+        # recurrent states / shifts: (stack, B, ...) — batch over data
+        if nd >= 2:
+            parts[1], _ = fit_batch(shape[1])
+            if name in ("ssm", "wkv") and model and nd >= 3 and \
+                    shape[2] % msz == 0:
+                parts[2] = model                            # heads
+        return P(*parts)
+    return _tree_map_with_path(one, cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Pytree helpers
+# ---------------------------------------------------------------------------
+
+def _key_name(k) -> str:
+    return getattr(k, "key", getattr(k, "name", str(k)))
+
+
+def _tree_map_with_path(fn, tree):
+    import jax.tree_util as jtu
+    flat, treedef = jtu.tree_flatten_with_path(tree)
+    return jtu.tree_unflatten(treedef, [fn(path, leaf) for path, leaf in flat])
+
+
+def named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

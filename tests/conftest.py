@@ -1,0 +1,33 @@
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+
+def run_multidevice(code: str, n_devices: int = 4, timeout: int = 600):
+    """Run a python snippet in a subprocess with N fake host devices.
+
+    The main test process must keep seeing exactly 1 CPU device (smoke
+    tests depend on it), so anything needing a mesh runs out-of-process.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = str(SRC)
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    if res.returncode != 0:
+        raise AssertionError(
+            f"multidevice subprocess failed:\n{res.stdout}\n{res.stderr}")
+    return res.stdout
+
+
+@pytest.fixture
+def multidevice():
+    return run_multidevice

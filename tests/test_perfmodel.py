@@ -1,0 +1,130 @@
+"""Rubick performance-model tests (paper Sec 4 + Table 2 protocol)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import paper_models
+from repro.core.oracle import AnalyticOracle, profiling_samples, true_params
+from repro.core.perfmodel import (Alloc, Env, FitParams, ModelProfile,
+                                  f_overlap, fit, predict_parts,
+                                  predict_throughput, predict_titer,
+                                  prediction_error)
+from repro.parallel.plan import ExecutionPlan, enumerate_plans
+
+
+# --- f_overlap (Sec 4.3) ---------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(x=st.floats(1e-4, 10), y=st.floats(1e-4, 10))
+def test_f_overlap_bounds(x, y):
+    """max(x,y) ≤ f_k(x,y) ≤ x+y for all k ≥ 1."""
+    for k in (1.0, 2.0, 8.0, 64.0):
+        v = f_overlap(k, x, y)
+        assert max(x, y) - 1e-9 <= v <= x + y + 1e-9
+
+
+def test_f_overlap_limits():
+    assert f_overlap(1.0, 2.0, 3.0) == pytest.approx(5.0)
+    assert f_overlap(64.0, 2.0, 3.0) == pytest.approx(3.0, rel=2e-2)
+    assert f_overlap(5.0, 0.0, 3.0) == 3.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(x=st.floats(1e-3, 5), y=st.floats(1e-3, 5),
+       k1=st.floats(1, 30), k2=st.floats(1, 30))
+def test_f_overlap_monotone_in_k(x, y, k1, k2):
+    lo, hi = sorted([k1, k2])
+    assert f_overlap(hi, x, y) <= f_overlap(lo, x, y) + 1e-9
+
+
+# --- structural predictions -------------------------------------------------
+
+PROF = paper_models.profile("gpt2-1.5b")
+ENV = Env()
+K = FitParams()
+
+
+def test_dp_comm_volume_scales():
+    """V_dp = 2P(d-1)/(dtp): zero at d=1, increasing in d."""
+    p1 = predict_parts(PROF, ExecutionPlan(dp=1), Alloc(1, 12), ENV, K)
+    assert p1.t_comm_dp == 0.0
+    p2 = predict_parts(PROF, ExecutionPlan(dp=2), Alloc(2, 24), ENV, K)
+    p8 = predict_parts(PROF, ExecutionPlan(dp=8), Alloc(8, 96), ENV, K)
+    assert 0 < p2.t_comm_dp < p8.t_comm_dp * 2  # per-GPU volume grows w/ d
+    # cross-node DP uses the slower interconnect
+    p16 = predict_parts(PROF, ExecutionPlan(dp=16), Alloc(16, 192), ENV, K)
+    assert p16.t_comm_dp > p8.t_comm_dp
+
+
+def test_tp_comm_on_critical_path():
+    pt = predict_parts(PROF, ExecutionPlan(dp=1, tp=4), Alloc(4, 48), ENV, K)
+    assert pt.t_comm_tp > 0 and pt.t_comm_pp == 0
+    pp = predict_parts(PROF, ExecutionPlan(dp=1, pp=4, ga_steps=4),
+                       Alloc(4, 48), ENV, K)
+    assert pp.t_comm_pp > 0 and pp.t_comm_tp == 0
+
+
+def test_gc_adds_forward_to_backward():
+    a = predict_parts(PROF, ExecutionPlan(dp=4), Alloc(4, 48), ENV, K)
+    b = predict_parts(PROF, ExecutionPlan(dp=4, gc=True), Alloc(4, 48), ENV, K)
+    assert b.t_bwd == pytest.approx(a.t_bwd + a.t_fwd)
+
+
+def test_offload_uses_cpus():
+    slow = predict_titer(PROF, ExecutionPlan(dp=1, zero_stage=1, offload=True),
+                         Alloc(1, 4), ENV, K)
+    fast = predict_titer(PROF, ExecutionPlan(dp=1, zero_stage=1, offload=True),
+                         Alloc(1, 48), ENV, K)
+    assert fast < slow                      # paper Fig 7: 2× CPUs → speedup
+
+
+def test_infeasible_batch_split():
+    t = predict_titer(PROF, ExecutionPlan(dp=3), Alloc(3, 36), ENV, K)
+    assert not math.isfinite(t)             # b=16 not divisible by 3
+
+
+# --- fitting (Table 2 protocol) ----------------------------------------------
+
+@pytest.mark.parametrize("model", ["gpt2-1.5b", "roberta-355m", "t5-1.2b",
+                                   "llama2-7b"])
+def test_fit_predicts_unseen(model):
+    """Fit on the 7-point profiling set; validate on unseen plan×alloc
+    combinations — avg error must be in the paper's Table-2 regime."""
+    prof = paper_models.profile(model)
+    oracle = AnalyticOracle()
+    samples = profiling_samples(prof, oracle)
+    assert len(samples) >= 6
+    assert sum(p.offload for p, _, _ in samples) >= 2
+    k = fit(prof, samples)
+    unseen = []
+    for g in (1, 2, 4, 8, 16):
+        for plan in enumerate_plans(g, prof.b, max_ga=4):
+            t = oracle.measure(prof, plan, Alloc(g, 12 * g))
+            if math.isfinite(t) and (plan, Alloc(g, 12 * g), t) not in samples:
+                unseen.append((plan, Alloc(g, 12 * g), t))
+    unseen = unseen[:40]
+    avg, mx = prediction_error(prof, k, unseen)
+    assert avg < 0.12, f"avg rel err {avg:.3f}"
+    assert mx < 0.45, f"max rel err {mx:.3f}"
+
+
+def test_fit_recovers_exact_truth():
+    """With the oracle's wiggle/noise off, fitting recovers predictions
+    (not necessarily the exact 7-tuple — it's not identifiable — but the
+    predictions must match to <1%)."""
+    prof = paper_models.profile("gpt2-1.5b")
+    oracle = AnalyticOracle(noise=0.0, wiggle=0.0)
+    samples = profiling_samples(prof, oracle)
+    k = fit(prof, samples)
+    unseen = []
+    for g in (2, 4, 8):
+        for plan in enumerate_plans(g, prof.b, max_ga=2):
+            t = oracle.measure(prof, plan, Alloc(g, 12 * g))
+            if math.isfinite(t):
+                unseen.append((plan, Alloc(g, 12 * g), t))
+    avg, mx = prediction_error(prof, k, unseen[:30])
+    assert avg < 0.05

@@ -1,0 +1,105 @@
+"""Scheduler + simulator invariants (Algorithm 1), incl. property tests."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import baselines, trace
+from repro.core.cluster import Cluster, check_capacity
+from repro.core.oracle import AnalyticOracle
+from repro.core.perfmodel import Alloc, Env
+from repro.core.sensitivity import SensitivityCurve, min_resources
+from repro.core.simulator import Simulator
+from repro.core import paper_models
+from repro.core.oracle import profiling_samples
+from repro.core.perfmodel import fit
+
+
+@pytest.fixture(scope="module")
+def fitted_curve():
+    prof = paper_models.profile("gpt2-1.5b")
+    oracle = AnalyticOracle()
+    k = fit(prof, profiling_samples(prof, oracle))
+    return SensitivityCurve(prof, k, max_gpus=16)
+
+
+def test_curve_envelope_monotone(fitted_curve):
+    """Fig 6: the sensitivity curve is a non-decreasing envelope."""
+    last = 0.0
+    for g in range(1, 17):
+        t = fitted_curve.throughput(g)
+        assert t >= last - 1e-9
+        last = t
+
+
+def test_slopes_nonnegative(fitted_curve):
+    for g in range(0, 16):
+        assert fitted_curve.slope_gpu(g) >= 0.0
+
+
+def test_min_resources_never_exceeds_request(fitted_curve):
+    base = fitted_curve.best_plan(8).throughput
+    g, c = min_resources(fitted_curve, 8, 96, base)
+    assert 1 <= g <= 8 and c <= 96
+    # minRes must actually achieve the baseline
+    assert fitted_curve.best_plan(g, c).throughput >= base * 0.999
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), n_jobs=st.integers(5, 25),
+       sched_name=st.sampled_from(["rubick", "sia", "synergy", "antman",
+                                   "rubick-e", "rubick-r"]))
+def test_capacity_invariant_random_traces(seed, n_jobs, sched_name):
+    """No scheduler may ever over-allocate a node (checked every event by
+    the simulator's assertion; this drives it across random traces)."""
+    jobs = trace.generate(n_jobs=n_jobs, hours=2, seed=seed,
+                          variant="mt" if sched_name == "antman" else "base")
+    cluster = Cluster(n_nodes=4)
+    sched = baselines.ALL[sched_name](
+        quotas={"A": 32} if sched_name == "antman" else None)
+    sim = Simulator(cluster, sched)
+    res = sim.run(jobs, max_time=2 * 86400)
+    assert res.makespan > 0
+    assert len(res.jcts) >= 1
+
+
+def test_all_jobs_complete():
+    jobs = trace.generate(n_jobs=15, hours=2, seed=7)
+    cluster = Cluster(n_nodes=8)
+    sim = Simulator(cluster, baselines.make_rubick())
+    res = sim.run(jobs)
+    assert len(res.jcts) == len(jobs)
+    assert all(v > 0 for v in res.jcts.values())
+
+
+def test_rubick_beats_static_policy():
+    """The headline claim at moderate load: full Rubick ≤ Rubick-N JCT."""
+    jobs = trace.generate(n_jobs=40, hours=3, seed=1, load_scale=2.0)
+    cluster = Cluster(n_nodes=8)
+    cache = {}
+    r = Simulator(cluster, baselines.make_rubick(), fit_cache=cache).run(jobs)
+    n = Simulator(cluster, baselines.make_rubick_n(), fit_cache=cache).run(jobs)
+    assert r.avg_jct <= n.avg_jct * 1.02
+    assert r.makespan <= n.makespan * 1.05
+
+
+def test_guarantee_jobs_eventually_run():
+    """Guaranteed jobs within quota are never starved."""
+    jobs = trace.generate(n_jobs=20, hours=2, seed=3, variant="mt")
+    cluster = Cluster(n_nodes=8)
+    sim = Simulator(cluster, baselines.make_rubick(quotas={"A": 64}))
+    res = sim.run(jobs)
+    for j in jobs:
+        if j.guaranteed:
+            assert res.jcts[j.name] < 86400.0
+
+
+def test_reconfig_penalty_limits_thrash():
+    jobs = trace.generate(n_jobs=25, hours=2, seed=5, load_scale=2.0)
+    cluster = Cluster(n_nodes=8)
+    res = Simulator(cluster, baselines.make_rubick()).run(jobs)
+    # bound: a healthy policy reconfigures, but not unboundedly
+    assert res.n_reconfig <= 25 * 12
