@@ -9,7 +9,6 @@ additionally doubles CPUs in the final stage (offload speedup).
 
 from __future__ import annotations
 
-import math
 import time
 
 from repro.core import paper_models

@@ -13,7 +13,7 @@ import time
 
 from repro.core import paper_models
 from repro.core.oracle import AnalyticOracle, profiling_samples
-from repro.core.perfmodel import Alloc, fit
+from repro.core.perfmodel import fit
 from repro.core.sensitivity import SensitivityCurve
 
 

@@ -12,7 +12,6 @@ import tempfile
 import time
 from pathlib import Path
 
-import numpy as np
 
 from repro.launch.train import train
 

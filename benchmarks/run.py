@@ -20,6 +20,7 @@ BENCHES = [
     "bench_table4_cluster",
     "bench_fig10_fig11_simulation",
     "bench_fig9_accuracy",
+    "bench_sched_overhead",
     "bench_roofline",
 ]
 

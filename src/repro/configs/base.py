@@ -12,9 +12,8 @@ CPU smoke tests: same family / same code paths, tiny dims.
 
 from __future__ import annotations
 
-import dataclasses
 import importlib
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Any
 
 

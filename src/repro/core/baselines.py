@@ -18,12 +18,9 @@ policy overrides, so comparisons isolate the reconfigurability dimensions.
 
 from __future__ import annotations
 
-import math
-from dataclasses import replace
-
 from repro.core import memory
 from repro.core.cluster import Cluster, JobState, used_per_node
-from repro.core.perfmodel import Alloc, Env, predict_throughput
+from repro.core.perfmodel import Alloc
 from repro.core.scheduler import RubickScheduler, SchedulerConfig
 
 

@@ -3,10 +3,9 @@ discrete-time simulator (paper Sec 5 + 7.3)."""
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 
-from repro.core.perfmodel import Alloc, Env, FitParams, ModelProfile
+from repro.core.perfmodel import Alloc, FitParams, ModelProfile
 from repro.parallel.plan import ExecutionPlan
 
 

@@ -20,7 +20,6 @@ the §Perf hillclimbing loop to find where the FLOPs go.
 
 from __future__ import annotations
 
-import json
 import math
 import re
 from collections import defaultdict

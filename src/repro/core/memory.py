@@ -19,8 +19,11 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import numpy as np
+
 from repro.core.perfmodel import Alloc, Env, ModelProfile
 from repro.parallel.plan import ExecutionPlan
+from repro.parallel.plan_table import PlanColumns
 
 C_ACT = 34.0          # bytes/token/hidden/layer without GC (bf16 copies)
 C_ACT_GC = 2.0        # checkpointed boundaries
@@ -89,3 +92,65 @@ def feasible(profile: ModelProfile, plan: ExecutionPlan, alloc: Alloc,
     est = estimate(profile, plan, alloc, env)
     hm = host_mem if host_mem is not None else env.host_mem
     return est.fits(env, max(alloc.cpus, 1), hm)
+
+
+# ---------------------------------------------------------------------------
+# Batched twin (vectorized over a plan table × allocation grid)
+# ---------------------------------------------------------------------------
+
+def estimate_batch(profile: ModelProfile, cols: PlanColumns,
+                   alloc_gpus, alloc_cpus, env: Env | None = None,
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(gpu_bytes, host_bytes, cpu_needed) arrays — elementwise identical to
+    ``estimate`` over broadcastable plan/alloc columns (pinned by tests)."""
+    env = env or Env()
+    P = profile.P
+    d = cols.dp.astype(float)
+    shard = (cols.tp * cols.pp).astype(float)
+    off = cols.offload
+    z = cols.zero
+    alloc_gpus = np.asarray(alloc_gpus)
+
+    with np.errstate(divide="ignore", invalid="ignore"):
+        # non-offload sharding tiers
+        w_z3 = 2.0 * P / (d * shard)
+        w_else = 2.0 * P / shard
+        weights = np.where(z == 3, w_z3, w_else)
+        grads = np.where(z >= 1, 2.0 * P / (d * shard), 2.0 * P / shard)
+        opt = np.where(z >= 1, 12.0 * P / (d * shard), 12.0 * P / shard)
+        # offload overrides
+        weights = np.where(off, 2.0 * P / (d * shard), weights)
+        grads = np.where(off, 2.0 * P / (d * shard), grads)
+        opt = np.where(off, 0.0, opt)
+        host = np.where(off, (12.0 + 2.0) * P / d, 1e9)
+        cpu_needed = np.where(
+            off, np.maximum(1, alloc_gpus // np.maximum(cols.dp, 1)), 1)
+
+        b_micro = profile.b / np.maximum(cols.dp * cols.ga, 1).astype(float)
+        c_act = np.where(cols.gc, C_ACT_GC, C_ACT)
+        act = c_act * b_micro * profile.s * profile.h * profile.l / shard
+        act = act + np.where(
+            cols.gc, C_ACT * b_micro * profile.s * profile.h / shard, 0.0)
+
+        gpu = weights + grads + opt + act + FRAMEWORK_OVERHEAD
+    shape = np.broadcast_shapes(gpu.shape, np.shape(host),
+                                np.shape(cpu_needed))
+    return (np.broadcast_to(gpu, shape), np.broadcast_to(host, shape),
+            np.broadcast_to(cpu_needed, shape))
+
+
+def feasible_mask(profile: ModelProfile, cols: PlanColumns,
+                  alloc_gpus, alloc_cpus, env: Env | None = None,
+                  host_mem: float | None = None) -> np.ndarray:
+    """Vectorized ``feasible``: the OOM + divisibility + size mask."""
+    env = env or Env()
+    alloc_gpus = np.asarray(alloc_gpus)
+    alloc_cpus = np.asarray(alloc_cpus)
+    gpu, host, cpu_needed = estimate_batch(profile, cols, alloc_gpus,
+                                           alloc_cpus, env)
+    hm = host_mem if host_mem is not None else env.host_mem
+    ok = (cols.n_gpus <= alloc_gpus)
+    ok = ok & (np.mod(profile.b, cols.dp * np.maximum(cols.ga, 1)) == 0)
+    ok = ok & (gpu <= env.gpu_mem) & (host <= hm)
+    ok = ok & (cpu_needed <= np.maximum(alloc_cpus, 1))
+    return ok

@@ -16,14 +16,15 @@ from __future__ import annotations
 
 import hashlib
 import math
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core import memory
 from repro.core.perfmodel import (Alloc, Env, FitParams, ModelProfile,
-                                  predict_titer)
+                                  predict_titer, predict_titer_batch)
 from repro.parallel.plan import ExecutionPlan
+from repro.parallel.plan_table import PlanTable
 
 
 def _unit_hash(*keys) -> float:
@@ -77,6 +78,46 @@ class AnalyticOracle:
         t = self.measure(profile, plan, alloc, seed)
         return profile.b / t if math.isfinite(t) and t > 0 else 0.0
 
+    # ------------------------------------------------------------------
+    def measure_batch(self, profile: ModelProfile, table: PlanTable,
+                      gpus: int, cpus: int, seed: int = 0) -> np.ndarray:
+        """T_iter for every table row at one allocation (inf where OOM) —
+        vectorized core prediction; the per-row wiggle/noise hashing stays
+        scalar (cheap) so values match ``measure`` row-for-row."""
+        g = np.asarray([gpus])
+        c = np.asarray([float(cpus)])
+        cols = table.cols.expand()
+        feas = memory.feasible_mask(profile, cols, g, c, self.env)[:, 0]
+        t = predict_titer_batch(profile, cols, g, c, self.env,
+                                true_params(profile.name))[:, 0]
+        out = np.full(len(table), np.inf)
+        alloc = Alloc(gpus, cpus)
+        for i in np.flatnonzero(feas & np.isfinite(t)):
+            w = 1.0 + self.wiggle * (2 * _unit_hash(
+                profile.name, table.strategies[i], alloc.gpus) - 1)
+            rng = np.random.default_rng(int(_unit_hash(
+                profile.name, table.plans[i], alloc, seed) * 2**31))
+            out[i] = t[i] * w * float(rng.lognormal(0.0, self.noise))
+        return out
+
+    def throughput_batch(self, profile: ModelProfile, table: PlanTable,
+                         gpus: int, cpus: int, seed: int = 0) -> np.ndarray:
+        t = self.measure_batch(profile, table, gpus, cpus, seed)
+        ok = np.isfinite(t) & (t > 0)
+        return np.where(ok, profile.b / np.where(ok, t, 1.0), 0.0)
+
+
+def true_curve(profile: ModelProfile, env: Env | None = None,
+               max_gpus: int = 64, cpus_per_gpu: int = 12, max_ga: int = 8):
+    """The GROUND-TRUTH sensitivity curve (hidden params, no wiggle/noise)
+    — shares the process-wide CurveCache with the scheduler stack, so
+    benchmarks comparing predicted vs true envelopes enumerate the plan
+    space once."""
+    from repro.core.sensitivity import get_curve
+    return get_curve(profile, true_params(profile.name), env or Env(),
+                     max_gpus=max_gpus, cpus_per_gpu=cpus_per_gpu,
+                     max_ga=max_ga)
+
 
 PROFILE_SET = "paper Sec 4.3: ≥7 points, ≥3 with ZeRO-Offload"
 
@@ -123,7 +164,6 @@ class JaxMicroOracle:
         import time
 
         import jax
-        import jax.numpy as jnp
 
         from repro.configs.base import ShapeConfig
         from repro.models import ModelOpts, build

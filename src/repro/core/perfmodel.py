@@ -20,13 +20,14 @@ minimizing RMSLE, exactly as Sec 4.3 prescribes.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import costs
 from repro.parallel.plan import ExecutionPlan
+from repro.parallel.plan_table import PlanColumns
 
 
 # ---------------------------------------------------------------------------
@@ -222,6 +223,137 @@ def predict_titer(profile, plan, alloc, env, k) -> float:
     return predict_parts(profile, plan, alloc, env, k).t_iter
 
 
+# ---------------------------------------------------------------------------
+# Batched engine (vectorized twin of predict_parts)
+# ---------------------------------------------------------------------------
+
+def f_overlap_batch(k: float, tx: np.ndarray, ty: np.ndarray) -> np.ndarray:
+    """Vectorized ``f_overlap``: same log-sum-exp in the k-power domain,
+    elementwise over broadcastable arrays."""
+    tx = np.asarray(tx, float)
+    ty = np.asarray(ty, float)
+    kk = max(float(k), 1.0)
+    with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+        lx, ly = np.log(tx), np.log(ty)
+        lo = np.maximum(lx, ly)
+        lse = np.exp(lo + np.log(np.exp(kk * (lx - lo)) +
+                                 np.exp(kk * (ly - lo))) / kk)
+    return np.where(tx <= 0.0, ty, np.where(ty <= 0.0, tx, lse))
+
+
+@dataclass
+class BatchBreakdown:
+    """Array-valued Breakdown: every field broadcasts to a common shape;
+    infeasible entries have t_iter = inf and zeroed parts (matching the
+    scalar path's default Breakdown())."""
+    t_fwd: np.ndarray
+    t_bwd: np.ndarray
+    t_comm_dp: np.ndarray
+    t_comm_tp: np.ndarray
+    t_comm_pp: np.ndarray
+    t_opt: np.ndarray
+    t_off: np.ndarray
+    t_iter: np.ndarray
+
+
+def predict_parts_batch(profile: ModelProfile, cols: PlanColumns,
+                        alloc_gpus, alloc_cpus, env: Env, k: FitParams,
+                        per_node=None) -> BatchBreakdown:
+    """All T_* parts of Eq. 1 for a whole plan table × allocation grid.
+
+    ``cols`` holds plan columns; ``alloc_gpus``/``alloc_cpus`` (and
+    optionally ``per_node`` — max GPUs of the allocation on one node) are
+    arrays broadcastable against them.  Use ``cols.expand()`` with (G,)
+    alloc vectors to get an (n_plans, G) grid, or flat same-length arrays
+    for per-sample evaluation (as ``fit`` does).  Semantics are pinned to
+    ``predict_parts`` by property tests (batch ≡ scalar to 1e-9).
+    """
+    b, s, h, l, P = profile.b, profile.s, profile.h, profile.l, profile.P
+    d = cols.dp.astype(float)
+    t = cols.tp.astype(float)
+    p = cols.pp.astype(float)
+    a = cols.ga.astype(float)                    # already ≥ 1
+    gcm = cols.gc
+    off = cols.offload
+    alloc_gpus = np.asarray(alloc_gpus)
+    alloc_cpus = np.asarray(alloc_cpus, float)
+    if per_node is None:
+        per_node = np.minimum(alloc_gpus, env.gpus_per_node)
+    per_node = np.asarray(per_node)
+
+    infeas = (cols.n_gpus > alloc_gpus) | (np.mod(b, cols.dp * cols.ga) != 0)
+
+    with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+        # --- T_fwd --------------------------------------------------------
+        pp_mode = p > 1
+        m = np.where(pp_mode, np.where(a > 1, a, p), a)
+        t_p = profile.t_fwd_unit * (b / (d * m)) * s / (t * p)
+        t_fwd_pp = t_p * (m + p - 1)
+        t_fwd_dp = profile.t_fwd_unit * ((b / (d * a)) * s) / t
+        t_fwd = np.where(pp_mode, t_fwd_pp, t_fwd_dp)
+        a_eff = np.where(pp_mode, 1.0, a)
+
+        # --- T_bwd --------------------------------------------------------
+        t_bwd = k.k_bwd * t_fwd + np.where(gcm, t_fwd, 0.0)
+
+        # --- T_comm -------------------------------------------------------
+        bpp = 2.0
+        V_dp = bpp * P * 2.0 * (d - 1) / np.maximum(d * t * p, 1.0)
+        B_dp = np.where(d * t * p <= per_node, env.B_intra, env.B_inter)
+        t_comm_dp = np.where(d > 1, V_dp / B_dp, 0.0)
+
+        V_tp = 8.0 * (t - 1) * b * s * h * l * bpp / np.maximum(d * t, 1.0)
+        B_tp = np.where(t <= per_node, env.B_intra, env.B_inter)
+        t_comm_tp = np.where(t > 1, V_tp / B_tp, 0.0)
+
+        V_pp = 2.0 * p * b * s * h * bpp / np.maximum(d * t, 1.0)
+        B_pp = np.where(t * p <= per_node, env.B_intra, env.B_inter)
+        t_comm_pp = np.where(p > 1, V_pp / B_pp, 0.0)
+
+        # --- T_opt / T_off ------------------------------------------------
+        cpus_per_rank = np.maximum(alloc_cpus / np.maximum(d, 1.0), 1.0)
+        t_opt_off = k.k_opt_off * P / (d * cpus_per_rank)
+        x = np.where((t > 1) | (p > 1), t * p,
+                     np.where(cols.zero >= 1, d, 1.0))
+        t_opt = np.where(off, t_opt_off, k.k_opt * P / x)
+        t_off = np.where(off, bpp * P / (d * env.B_pcie), 0.0)
+
+        # --- combine ------------------------------------------------------
+        sync = f_overlap_batch(k.k_sync, t_bwd, t_comm_dp)
+        t_cc = np.where(a_eff > 1,
+                        a_eff * t_fwd + (a_eff - 1) * t_bwd + sync,
+                        t_fwd + sync + t_comm_tp + t_comm_pp)
+        t_oo = np.where(off,
+                        f_overlap_batch(k.k_off, t_comm_dp, t_off) +
+                        f_overlap_batch(k.k_swap, t_opt, t_off),
+                        t_opt)
+        t_iter = t_cc + t_oo + k.k_const
+
+    def _mask(arr):
+        return np.where(infeas, 0.0, arr)
+
+    return BatchBreakdown(
+        t_fwd=_mask(t_fwd), t_bwd=_mask(t_bwd),
+        t_comm_dp=_mask(t_comm_dp), t_comm_tp=_mask(t_comm_tp),
+        t_comm_pp=_mask(t_comm_pp), t_opt=_mask(t_opt), t_off=_mask(t_off),
+        t_iter=np.where(infeas, np.inf, t_iter))
+
+
+def predict_titer_batch(profile, cols, alloc_gpus, alloc_cpus, env, k,
+                        per_node=None) -> np.ndarray:
+    return predict_parts_batch(profile, cols, alloc_gpus, alloc_cpus, env, k,
+                               per_node).t_iter
+
+
+def predict_throughput_batch(profile, cols, alloc_gpus, alloc_cpus, env, k,
+                             per_node=None) -> np.ndarray:
+    """Samples/sec per entry; 0 where infeasible (matching scalar)."""
+    t = predict_titer_batch(profile, cols, alloc_gpus, alloc_cpus, env, k,
+                            per_node)
+    ok = np.isfinite(t) & (t > 0)
+    return np.where(ok, profile.b / np.where(ok, t, 1.0), 0.0)
+
+
 def predict_throughput(profile, plan, alloc, env, k) -> float:
     """Samples/sec = b / T_iter."""
     t = predict_titer(profile, plan, alloc, env, k)
@@ -265,11 +397,18 @@ def fit(profile: ModelProfile, samples: list[tuple[ExecutionPlan, Alloc, float]]
     def unpack(z):
         return FitParams.from_vector(lo + (hi - lo) / (1 + np.exp(-z)))
 
+    # vectorize the loss: flatten samples into plan columns + alloc columns
+    # once, then each Nelder-Mead evaluation is a single batched pass
+    cols = PlanColumns.from_plans([pl for pl, _, _ in samples])
+    a_gpus = np.array([al.gpus for _, al, _ in samples])
+    a_cpus = np.array([al.cpus for _, al, _ in samples], float)
+    a_node = np.array([al.max_gpus_on_node(env) for _, al, _ in samples])
+    true = np.array([t for _, _, t in samples])
+
     def loss(z):
         k = unpack(z)
-        pred = np.array([predict_titer(profile, pl, al, env, k)
-                         for pl, al, _ in samples])
-        true = np.array([t for _, _, t in samples])
+        pred = predict_titer_batch(profile, cols, a_gpus, a_cpus, env, k,
+                                   per_node=a_node)
         ok = np.isfinite(pred)
         if not ok.any():
             return 1e6

@@ -15,17 +15,29 @@ Reconfiguration penalty (Sec 5.2): a job is reconfigured only while
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core import memory
-from repro.core.cluster import Cluster, Job, JobState, Placement, used_per_node
-from repro.core.perfmodel import Alloc, Env, FitParams, ModelProfile
-from repro.core.sensitivity import SensitivityCurve, min_resources
+from repro.core.cluster import Cluster, JobState, Placement, used_per_node
+from repro.core.perfmodel import Alloc, Env, predict_throughput
+from repro.core.sensitivity import SensitivityCurve, get_curve, min_resources
 from repro.parallel.plan import ExecutionPlan
 
 RECONFIG_THRESHOLD = 0.97
 DELTA_GPU = 1
 CPUS_PER_GPU = 12
+
+
+def _node_usage(jobs: list[JobState], nid: int) -> tuple[int, int, float]:
+    g = c = 0
+    m = 0.0
+    for js in jobs:
+        if nid in js.placement:
+            pg, pc, pm = js.placement[nid]
+            g += pg
+            c += pc
+            m += pm
+    return g, c, m
 
 
 @dataclass
@@ -38,6 +50,8 @@ class SchedulerConfig:
     # ablation switches (Rubick-E / -R / -N variants, Sec 7.3)
     reconfigure_plans: bool = True
     reallocate_resources: bool = True
+    # plan-evaluation engine: "batch" (vectorized) or "scalar" (reference)
+    curve_engine: str = "batch"
 
 
 class RubickScheduler:
@@ -49,24 +63,23 @@ class RubickScheduler:
         self.env = env or Env()
         self.cfg = cfg or SchedulerConfig()
         self.quotas = quotas or {}
-        self._curves: dict[str, SensitivityCurve] = {}
 
     # ------------------------------------------------------------------
     def curve(self, js: JobState, cluster: Cluster) -> SensitivityCurve:
-        key = js.job.profile.name + f"@b{js.job.profile.b}"
-        if key not in self._curves:
-            self._curves[key] = SensitivityCurve(
-                js.job.profile, js.fitted, self.env,
-                max_gpus=cluster.total_gpus,
-                cpus_per_gpu=self.cfg.cpus_per_gpu, max_ga=self.cfg.max_ga)
-        return self._curves[key]
+        """Shared process-wide curve (see sensitivity.CurveCache): jobs of
+        the same model type + fitted params reuse one materialized
+        envelope across scheduler instances and the simulator."""
+        return get_curve(js.job.profile, js.fitted, self.env,
+                         max_gpus=cluster.total_gpus,
+                         cpus_per_gpu=self.cfg.cpus_per_gpu,
+                         max_ga=self.cfg.max_ga,
+                         engine=self.cfg.curve_engine)
 
     def _ensure_min_res(self, js: JobState, cluster: Cluster) -> None:
         if js.min_res is not None:
             return
         curve = self.curve(js, cluster)
         alloc = Alloc(js.job.req_gpus, js.job.req_cpus)
-        from repro.core.perfmodel import predict_throughput
         base = predict_throughput(js.job.profile, js.job.orig_plan, alloc,
                                   self.env, js.fitted)
         if not math.isfinite(base):
@@ -152,7 +165,7 @@ class RubickScheduler:
                                    else js.total_gpus)
 
         shrunk: list[tuple[JobState, int]] = []
-        used = used_per_node([j for j in others])
+        used = used_per_node(others)
         for node in cluster.nodes:
             if got_g >= target_g:
                 break
@@ -172,14 +185,15 @@ class RubickScheduler:
                     break
                 self._shrink(victim, node.id, cluster)
                 shrunk.append((victim, node.id))
-                fg, fc, fm = node.free(used_per_node(others))
+                # shrinks only touch this node: refresh its usage in place
+                used[node.id] = _node_usage(others, node.id)
+                fg, fc, fm = node.free(used)
                 take_g = min(fg, target_g - got_g)
                 take_c = min(fc, self.cfg.cpus_per_gpu * take_g)
             if take_g > 0:
                 placement[node.id] = (take_g, take_c, 0.0)
                 got_g += take_g
                 got_c += take_c
-            used = used_per_node(others)
 
         # lines 19-24: commit if ≥ minRes
         if got_g >= max(min_g, 1):
@@ -224,13 +238,7 @@ class RubickScheduler:
         """Grow while the slope is positive, up to cluster size."""
         if not self.cfg.reallocate_resources:
             return js.job.req_gpus
-        g = js.job.req_gpus
-        best_t = curve.throughput(g)
-        hi = cluster.total_gpus
-        while g < hi and curve.throughput(g + 1) > best_t * 1.001:
-            g += 1
-            best_t = curve.throughput(g)
-        return g
+        return curve.grow_target(js.job.req_gpus, cluster.total_gpus)
 
     def _fixed_plan(self, js: JobState, gpus: int) -> ExecutionPlan | None:
         """Rubick-R: keep the plan family, scale only the DP size (Sia's
@@ -305,7 +313,6 @@ class RubickScheduler:
 
 def throughput_of(js: JobState, env: Env) -> float:
     """Oracle-free predicted throughput of a job's current assignment."""
-    from repro.core.perfmodel import predict_throughput
     if js.status != "running" or js.plan is None or js.alloc is None:
         return 0.0
     return predict_throughput(js.job.profile, js.plan, js.alloc, env,

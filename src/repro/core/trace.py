@@ -18,7 +18,8 @@ from repro.core import memory, paper_models
 from repro.core.cluster import Job
 from repro.core.oracle import AnalyticOracle
 from repro.core.perfmodel import Alloc, Env
-from repro.parallel.plan import ExecutionPlan, enumerate_plans
+from repro.parallel import plan_table
+from repro.parallel.plan import ExecutionPlan
 
 # Philly-like request-size distribution (Jeon et al., ATC'19)
 GPU_SIZES = [1, 2, 4, 8, 16, 32, 64]
@@ -27,13 +28,12 @@ GPU_PROBS = [0.45, 0.15, 0.15, 0.13, 0.07, 0.03, 0.02]
 
 def _feasible_plans(profile, gpus: int, env: Env, allow_tp_pp: bool,
                     max_ga: int = 8) -> list[ExecutionPlan]:
-    alloc = Alloc(gpus, 12 * gpus)
-    out = []
-    for plan in enumerate_plans(gpus, profile.b, max_ga=max_ga,
-                                allow_tp_pp=allow_tp_pp):
-        if memory.feasible(profile, plan, alloc, env):
-            out.append(plan)
-    return out
+    """Feasible plan skeletons at exactly ``gpus`` — one batched OOM mask
+    over the shared plan table instead of a per-plan Python loop."""
+    tbl = plan_table.get(profile.b, gpus, max_ga, allow_tp_pp=allow_tp_pp)
+    ok = memory.feasible_mask(profile, tbl.cols, gpus, 12 * gpus, env)
+    ok &= tbl.exact_mask(gpus)
+    return [tbl.plans[i] for i in np.flatnonzero(ok)]
 
 
 def generate(n_jobs: int = 60, hours: float = 12.0, seed: int = 0,
@@ -76,8 +76,10 @@ def generate(n_jobs: int = 60, hours: float = 12.0, seed: int = 0,
         if not plans:
             continue
         if variant == "bp":
-            plan = max(plans, key=lambda p: oracle.throughput(
-                profile, p, Alloc(gpus, 12 * gpus)))
+            tbl = plan_table.get(profile.b, gpus, 8, allow_tp_pp=allow_tp_pp)
+            thpt = oracle.throughput_batch(profile, tbl, gpus, 12 * gpus)
+            thpt = np.where(tbl.exact_mask(gpus), thpt, 0.0)
+            plan = tbl.plans[int(thpt.argmax())]
         else:
             plan = plans[int(rng.integers(len(plans)))]
         # duration: lognormal hours → target iterations at the oracle rate

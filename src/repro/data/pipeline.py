@@ -11,7 +11,6 @@ Also provides a file-backed token source (np.memmap) for real corpora.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from pathlib import Path
 
 import numpy as np
 

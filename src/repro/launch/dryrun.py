@@ -24,7 +24,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_applicable

@@ -10,7 +10,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 
 def main() -> None:

@@ -16,7 +16,7 @@ input of the given (shape × step-kind) cell — no device allocation.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
 from typing import Any, Callable
 
@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.models import encdec, hybrid, nn, rwkv_model, transformer
+from repro.models import encdec, hybrid, rwkv_model, transformer
 from repro.models.transformer import ModelOpts
 
 

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import mamba2, nn
 from repro.models.transformer import (ModelOpts, attn_apply, attn_decode,
-                                      attn_init, _ring_write, logits_fn)
+                                      attn_init, _ring_write)
 from repro.parallel.axes import shard
 
 

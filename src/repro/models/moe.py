@@ -14,7 +14,6 @@ stays small at 1M-token batches.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ compiling 61–81-layer models on the 512-device dry-run mesh.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ FSDP on DCN bandwidth.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
@@ -73,7 +72,13 @@ def pipeline_forward(layer_fn: Callable, stacked_params, x_micro,
         return outs
 
     pspec = jax.tree.map(lambda _: P(axis), stacked_params)
-    fn = jax.shard_map(stage_body, mesh=mesh,
+    if hasattr(jax, "shard_map"):            # jax ≥ 0.6
+        fn = jax.shard_map(stage_body, mesh=mesh,
+                           in_specs=(pspec, P()), out_specs=P(),
+                           check_vma=False)
+    else:
+        from jax.experimental.shard_map import shard_map
+        fn = shard_map(stage_body, mesh=mesh,
                        in_specs=(pspec, P()), out_specs=P(),
-                       check_vma=False)
+                       check_rep=False)
     return fn(stacked_params, x_micro)

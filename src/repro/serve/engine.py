@@ -8,7 +8,6 @@ donated KV cache, plus a simple batched greedy engine.
 
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,143 @@
+"""Strategy objects for the hypothesis shim: deterministic draws with a
+bias toward boundary values (the corners real hypothesis finds by
+shrinking)."""
+
+from __future__ import annotations
+
+from random import Random
+
+_EDGE_P = 0.15      # probability a draw returns a boundary value
+
+
+class SearchStrategy:
+    def example(self, rng: Random):
+        raise NotImplementedError
+
+    def map(self, f) -> "SearchStrategy":
+        return _Mapped(self, f)
+
+    def filter(self, pred) -> "SearchStrategy":
+        return _Filtered(self, pred)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base, f):
+        self.base, self.f = base, f
+
+    def example(self, rng):
+        return self.f(self.base.example(rng))
+
+
+class _Filtered(SearchStrategy):
+    def __init__(self, base, pred):
+        self.base, self.pred = base, pred
+
+    def example(self, rng):
+        for _ in range(1000):
+            v = self.base.example(rng)
+            if self.pred(v):
+                return v
+        raise ValueError("filter predicate rejected 1000 examples")
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = float(lo), float(hi)
+
+    def example(self, rng):
+        if rng.random() < _EDGE_P:
+            return rng.choice((self.lo, self.hi))
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def example(self, rng):
+        if rng.random() < _EDGE_P:
+            return rng.choice((self.lo, self.hi))
+        return rng.randint(self.lo, self.hi)
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def example(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Booleans(SearchStrategy):
+    def example(self, rng):
+        return rng.random() < 0.5
+
+
+class _Just(SearchStrategy):
+    def __init__(self, value):
+        self.value = value
+
+    def example(self, rng):
+        return self.value
+
+
+class _OneOf(SearchStrategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def example(self, rng):
+        return rng.choice(self.options).example(rng)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elem, min_size, max_size):
+        self.elem, self.min_size, self.max_size = elem, min_size, max_size
+
+    def example(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elem.example(rng) for _ in range(n)]
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, elems):
+        self.elems = elems
+
+    def example(self, rng):
+        return tuple(e.example(rng) for e in self.elems)
+
+
+def floats(min_value=None, max_value=None, **_ignored) -> SearchStrategy:
+    lo = -1e6 if min_value is None else min_value
+    hi = 1e6 if max_value is None else max_value
+    return _Floats(lo, hi)
+
+
+def integers(min_value=None, max_value=None) -> SearchStrategy:
+    lo = -(2 ** 31) if min_value is None else min_value
+    hi = 2 ** 31 if max_value is None else max_value
+    return _Integers(lo, hi)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    return _SampledFrom(elements)
+
+
+def booleans() -> SearchStrategy:
+    return _Booleans()
+
+
+def just(value) -> SearchStrategy:
+    return _Just(value)
+
+
+def one_of(*options) -> SearchStrategy:
+    return _OneOf(options)
+
+
+def lists(elements, min_size: int = 0, max_size: int = 10,
+          **_ignored) -> SearchStrategy:
+    return _Lists(elements, min_size, max_size)
+
+
+def tuples(*elements) -> SearchStrategy:
+    return _Tuples(elements)

@@ -10,6 +10,14 @@ SRC = REPO / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
+# Prefer a real `hypothesis` install (declared in pyproject test extras);
+# fall back to the vendored API-compatible shim when the environment can't
+# pip-install (the repro container bakes its deps).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.append(str(REPO / "tests" / "_shims"))
+
 
 def run_multidevice(code: str, n_devices: int = 4, timeout: int = 600):
     """Run a python snippet in a subprocess with N fake host devices.

@@ -1,0 +1,215 @@
+"""Batched plan-evaluation engine: batch ≡ scalar equivalence + envelope
+invariants (ISSUE 1 acceptance tests).
+
+The scalar path (`predict_parts`, `memory.estimate`, per-plan curve loops)
+is the reference implementation; the batched path must agree to 1e-9.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import baselines, memory, paper_models, trace
+from repro.core.cluster import Cluster, JobState, check_capacity
+from repro.core.perfmodel import (Alloc, Env, FitParams, f_overlap,
+                                  f_overlap_batch, predict_parts,
+                                  predict_parts_batch, predict_titer,
+                                  predict_titer_batch)
+from repro.core.sensitivity import (CurveCache, SensitivityCurve, get_curve,
+                                    min_resources)
+from repro.parallel import plan_table
+
+ENV = Env()
+PROF = paper_models.profile("gpt2-1.5b")
+TBL = plan_table.get(PROF.b, 16, 8)
+K = FitParams()
+
+PLACEMENTS = [(), (8, 8), (4, 4), (2, 2, 2, 2), (1, 1, 1, 1, 1, 1, 1, 1)]
+
+
+def _per_node(alloc: Alloc) -> int | None:
+    return max(alloc.gpus_per_node) if alloc.gpus_per_node else None
+
+
+# --- f_overlap ---------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(x=st.floats(0, 10), y=st.floats(0, 10), k=st.floats(1, 64))
+def test_f_overlap_batch_matches_scalar(x, y, k):
+    got = f_overlap_batch(k, np.array([x]), np.array([y]))[0]
+    assert got == pytest.approx(f_overlap(k, x, y), rel=1e-9, abs=1e-12)
+
+
+# --- predict: whole table vs scalar loop -------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(gpus=st.integers(1, 16), cpus=st.integers(1, 192),
+       pl=st.sampled_from(PLACEMENTS),
+       model=st.sampled_from(["gpt2-1.5b", "llama2-7b", "roberta-355m"]))
+def test_batch_titer_equals_scalar_over_table(gpus, cpus, pl, model):
+    """Every plan-table row × one allocation: batch T_iter ≡ scalar T_iter
+    to 1e-9 (including infeasible rows → inf on both sides)."""
+    prof = paper_models.profile(model)
+    tbl = plan_table.get(prof.b, 16, 8)
+    alloc = Alloc(gpus, cpus, gpus_per_node=pl)
+    t_batch = predict_titer_batch(
+        prof, tbl.cols, np.asarray(gpus), np.asarray(float(cpus)), ENV, K,
+        per_node=_per_node(alloc))
+    for i, plan in enumerate(tbl.plans):
+        t_ref = predict_titer(prof, plan, alloc, ENV, K)
+        if math.isfinite(t_ref):
+            assert t_batch[i] == pytest.approx(t_ref, rel=1e-9), plan
+        else:
+            assert not math.isfinite(t_batch[i]), plan
+
+
+@settings(max_examples=10, deadline=None)
+@given(gpus=st.integers(1, 16), cpus=st.integers(4, 96))
+def test_batch_parts_equal_scalar(gpus, cpus):
+    """The full T_* breakdown agrees, not just the total."""
+    alloc = Alloc(gpus, cpus)
+    parts = predict_parts_batch(PROF, TBL.cols, np.asarray(gpus),
+                                np.asarray(float(cpus)), ENV, K)
+    for i, plan in enumerate(TBL.plans):
+        ref = predict_parts(PROF, plan, alloc, ENV, K)
+        if not math.isfinite(ref.t_iter):
+            continue
+        for name in ("t_fwd", "t_bwd", "t_comm_dp", "t_comm_tp", "t_comm_pp",
+                     "t_opt", "t_off"):
+            assert getattr(parts, name)[i] == pytest.approx(
+                getattr(ref, name), rel=1e-9, abs=1e-15), (plan, name)
+
+
+@settings(max_examples=10, deadline=None)
+@given(gpus=st.integers(1, 16), cpus=st.integers(1, 192))
+def test_memory_batch_equals_scalar(gpus, cpus):
+    alloc = Alloc(gpus, cpus)
+    gpu_b, host_b, cpu_n = memory.estimate_batch(
+        PROF, TBL.cols, np.asarray(gpus), np.asarray(cpus), ENV)
+    feas = memory.feasible_mask(PROF, TBL.cols, np.asarray(gpus),
+                                np.asarray(cpus), ENV)
+    for i, plan in enumerate(TBL.plans):
+        est = memory.estimate(PROF, plan, alloc, ENV)
+        assert gpu_b[i] == pytest.approx(est.gpu_bytes, rel=1e-12)
+        assert host_b[i] == pytest.approx(est.host_bytes, rel=1e-12)
+        assert cpu_n[i] == est.cpu_needed
+        assert bool(feas[i]) == memory.feasible(PROF, plan, alloc, ENV)
+
+
+# --- curve: batch engine ≡ scalar engine -------------------------------------
+
+@pytest.fixture(scope="module")
+def curve_pair():
+    batch = SensitivityCurve(PROF, K, ENV, max_gpus=12, engine="batch")
+    scalar = SensitivityCurve(PROF, K, ENV, max_gpus=12, engine="scalar")
+    return batch, scalar
+
+
+def test_curve_engines_agree(curve_pair):
+    batch, scalar = curve_pair
+    for g in range(0, 13):
+        assert batch.throughput(g) == pytest.approx(
+            scalar.throughput(g), rel=1e-9, abs=1e-12), g
+        assert batch.slope_gpu(g) == pytest.approx(
+            scalar.slope_gpu(g), rel=1e-6, abs=1e-9), g
+        if g >= 1:
+            assert batch.best_plan(g).throughput == pytest.approx(
+                scalar.best_plan(g).throughput, rel=1e-9, abs=1e-12), g
+            assert batch.best_plan(g).plan == scalar.best_plan(g).plan, g
+
+
+def test_curve_engines_agree_with_placement(curve_pair):
+    """The placement fix: both engines carry gpus_per_node through the
+    whole ≤ g sweep (spread placements select inter-node bandwidth)."""
+    batch, scalar = curve_pair
+    for pl in [(4, 4), (2, 2, 2, 2), (1, 1, 1, 1)]:
+        g = sum(pl)
+        b = batch.best_plan_at_most(g, 12 * g, gpus_per_node=pl)
+        s = scalar.best_plan_at_most(g, 12 * g, gpus_per_node=pl)
+        assert b.throughput == pytest.approx(s.throughput, rel=1e-9), pl
+
+
+def test_spread_placement_changes_best_plan():
+    """A fully-spread placement must not be evaluated as packed: one GPU
+    per node forces inter-node bandwidth for any multi-GPU group."""
+    curve = SensitivityCurve(PROF, K, ENV, max_gpus=8)
+    packed = curve.best_plan_at_most(4, 48, gpus_per_node=(4,))
+    spread = curve.best_plan_at_most(4, 48, gpus_per_node=(1, 1, 1, 1))
+    assert packed.throughput >= spread.throughput
+
+
+def test_explicit_cpus_paths_engines_agree():
+    """Regression: throughput(g, cpus) and best_plan_at_most with a
+    placement + default cpus must evaluate each row at its OWN per-g CPU
+    cap, exactly like the scalar loop — llama-30b makes offload plans win,
+    so a wrong CPU budget shifts the result."""
+    prof = paper_models.profile("llama-30b")
+    batch = SensitivityCurve(prof, K, ENV, max_gpus=12, engine="batch")
+    scalar = SensitivityCurve(prof, K, ENV, max_gpus=12, engine="scalar")
+    for g, cpus in [(6, 96), (4, 24), (12, 60)]:
+        assert batch.throughput(g, cpus) == pytest.approx(
+            scalar.throughput(g, cpus), rel=1e-9), (g, cpus)
+    for pl in [(4, 2), (2, 2, 2), (8, 4)]:
+        g = sum(pl)
+        b = batch.best_plan_at_most(g, None, gpus_per_node=pl)
+        s = scalar.best_plan_at_most(g, None, gpus_per_node=pl)
+        assert b.throughput == pytest.approx(s.throughput, rel=1e-9), pl
+
+
+def test_min_resources_engines_agree(curve_pair):
+    batch, scalar = curve_pair
+    for base_g in (4, 8, 12):
+        base = scalar.best_plan(base_g).throughput
+        assert min_resources(batch, base_g, 12 * base_g, base) == \
+            min_resources(scalar, base_g, 12 * base_g, base)
+
+
+# --- envelope invariants -----------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(model=st.sampled_from(list(paper_models.TABLE2)))
+def test_envelope_monotone_all_models(model):
+    prof = paper_models.profile(model)
+    curve = SensitivityCurve(prof, K, ENV, max_gpus=16)
+    e = curve.materialize()
+    assert np.all(np.diff(e.env) >= -1e-12)
+    for g in range(0, 16):
+        assert curve.slope_gpu(g) >= 0.0
+        assert curve.throughput(g) <= curve.throughput(g + 1) + 1e-12
+    # envelope point is reachable: best_plan_at_most matches env[]
+    for g in (1, 4, 9, 16):
+        assert curve.best_plan_at_most(g).throughput == pytest.approx(
+            float(e.env[g]), abs=1e-12)
+
+
+# --- curve cache -------------------------------------------------------------
+
+def test_curve_cache_shares_instances():
+    cache = CurveCache()
+    a = cache.get(PROF, K, ENV, max_gpus=8)
+    b = cache.get(PROF, K, ENV, max_gpus=8)
+    assert a is b
+    assert cache.get(PROF, K, ENV, max_gpus=16) is not a
+    assert len(cache) == 2
+    # the module-level cache is what the scheduler stack uses
+    assert get_curve(PROF, K, ENV, max_gpus=8) is \
+        get_curve(PROF, K, ENV, max_gpus=8)
+
+
+# --- end-to-end: randomized multi-job schedule keeps capacity ----------------
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 500), n_jobs=st.integers(4, 12))
+def test_check_capacity_random_schedule(seed, n_jobs):
+    """Drive the batched scheduler directly over random job mixes and
+    assert no node is ever over-allocated."""
+    jobs = trace.generate(n_jobs=n_jobs, hours=1, seed=seed)
+    states = [JobState(job=j, fitted=K) for j in jobs]
+    cluster = Cluster(n_nodes=4)
+    sched = baselines.make_rubick()
+    for step in range(4):
+        sched.schedule(states, cluster, now=step * 600.0)
+        assert check_capacity(cluster, states)

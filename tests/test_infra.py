@@ -1,8 +1,6 @@
 """Checkpoint, data pipeline, memory estimator, plans, HLO analyzer,
 serving engine."""
 
-import math
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,7 +10,7 @@ from hypothesis import strategies as st
 
 from repro import configs
 from repro.core import hlo_cost, memory, paper_models
-from repro.core.perfmodel import Alloc, Env
+from repro.core.perfmodel import Alloc
 from repro.data.pipeline import DataConfig, SyntheticTokens
 from repro.parallel.plan import ExecutionPlan, enumerate_plans
 from repro.train.checkpoint import CheckpointManager

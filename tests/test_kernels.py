@@ -1,7 +1,6 @@
 """Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles in
 ``repro.kernels.ref`` (interpret=True executes kernel bodies on CPU)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,10 +1,6 @@
 """Distribution-correctness tests (subprocess with fake host devices so the
 main process keeps seeing 1 device)."""
 
-import json
-
-import pytest
-
 
 def test_dp_tp_matches_single_device(multidevice):
     """A DP2×TP2 sharded train step must produce the same loss trajectory

@@ -2,16 +2,14 @@
 
 import math
 
-import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import paper_models
-from repro.core.oracle import AnalyticOracle, profiling_samples, true_params
-from repro.core.perfmodel import (Alloc, Env, FitParams, ModelProfile,
-                                  f_overlap, fit, predict_parts,
-                                  predict_throughput, predict_titer,
+from repro.core.oracle import AnalyticOracle, profiling_samples
+from repro.core.perfmodel import (Alloc, Env, FitParams, f_overlap, fit,
+                                  predict_parts, predict_titer,
                                   prediction_error)
 from repro.parallel.plan import ExecutionPlan, enumerate_plans
 

@@ -1,16 +1,12 @@
 """Scheduler + simulator invariants (Algorithm 1), incl. property tests."""
 
-import math
-
-import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import baselines, trace
-from repro.core.cluster import Cluster, check_capacity
+from repro.core.cluster import Cluster
 from repro.core.oracle import AnalyticOracle
-from repro.core.perfmodel import Alloc, Env
 from repro.core.sensitivity import SensitivityCurve, min_resources
 from repro.core.simulator import Simulator
 from repro.core import paper_models
@@ -95,6 +91,18 @@ def test_guarantee_jobs_eventually_run():
     for j in jobs:
         if j.guaranteed:
             assert res.jcts[j.name] < 86400.0
+
+
+def test_guarantee_violations_wired():
+    """SimResult.guarantee_violations counts steps where a running
+    guaranteed job misses its baseline throughput (tolerance absorbs the
+    oracle's wiggle); it must be a finite non-negative count."""
+    jobs = trace.generate(n_jobs=12, hours=1, seed=2)
+    cluster = Cluster(n_nodes=2)          # tight cluster → real pressure
+    res = Simulator(cluster, baselines.make_rubick()).run(jobs)
+    assert isinstance(res.guarantee_violations, int)
+    assert res.guarantee_violations >= 0
+    assert "guarantee_violations" in res.summary()
 
 
 def test_reconfig_penalty_limits_thrash():

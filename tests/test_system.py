@@ -1,18 +1,14 @@
 """End-to-end behaviour of the paper's system: profile → fit → sensitivity
 curves → schedule → simulate; the complete Rubick claim chain."""
 
-import math
-
 import numpy as np
-import pytest
 
 from repro.core import baselines, paper_models, trace
 from repro.core.cluster import Cluster
 from repro.core.oracle import AnalyticOracle, profiling_samples
-from repro.core.perfmodel import Alloc, fit, prediction_error
+from repro.core.perfmodel import fit
 from repro.core.sensitivity import SensitivityCurve
 from repro.core.simulator import Simulator
-from repro.parallel.plan import ExecutionPlan
 
 
 def test_fig3_best_plan_changes_with_resources():
