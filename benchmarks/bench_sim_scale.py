@@ -1,0 +1,115 @@
+"""Event-driven vs discrete-time simulation engine: parity + scale.
+
+Acceptance (ISSUE 2):
+  * parity — the event engine reproduces the discrete loop's avg JCT and
+    makespan within 1% on seed traces (rubick + two baselines);
+  * scale — a 256-GPU / 500-job heterogeneous Philly trace runs ≥5×
+    faster wall-clock under the event engine.
+
+The discrete loop pays a full scheduler pass at EVERY step (including
+pause-expiry steps where nothing changed) plus an oracle re-measure of
+every running job per step; the event engine schedules only on cluster
+state changes and re-measures only jobs whose assignment changed.
+
+    PYTHONPATH=src python -m benchmarks.bench_sim_scale [--smoke]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.core import baselines, trace
+from repro.core.cluster import Cluster, JobState, hetero_cluster
+from repro.core.simulator import Simulator
+
+# 32 nodes x 8 GPUs = 256 GPUs over four GPU generations
+HETERO_SPEC = [("a800", 12), ("h800", 4), ("a100-40g", 8), ("v100", 8)]
+SMOKE_SPEC = [("a800", 2), ("a100-40g", 1), ("v100", 1)]
+
+
+def _prewarm(cluster, jobs, cache) -> None:
+    """Pay fits + curve materialization once, outside the timed region,
+    so both engines are measured on simulation work alone."""
+    sim = Simulator(cluster, baselines.make_rubick(), fit_cache=cache)
+    states = [JobState(job=j, fitted=sim._fitted(j)) for j in jobs]
+    sim._prewarm(states)
+
+
+def _timed(make_cluster, jobs, cache, mode, trials=2):
+    best, res = float("inf"), None
+    for _ in range(trials):
+        sim = Simulator(make_cluster(), baselines.make_rubick(),
+                        fit_cache=cache, mode=mode)
+        t0 = time.perf_counter()
+        res = sim.run(jobs)
+        best = min(best, time.perf_counter() - t0)
+    return best, res
+
+
+def parity_rows(cache, n_jobs=20, n_nodes=4) -> list[dict]:
+    rows = []
+    for sched_name in ("rubick", "sia", "synergy"):
+        jobs = trace.generate(n_jobs=n_jobs, hours=2, seed=5,
+                              load_scale=2.0)
+        ev = Simulator(Cluster(n_nodes=n_nodes),
+                       baselines.ALL[sched_name](), fit_cache=cache,
+                       mode="event").run(jobs)
+        di = Simulator(Cluster(n_nodes=n_nodes),
+                       baselines.ALL[sched_name](), fit_cache=cache,
+                       mode="discrete").run(jobs)
+        jct_d = abs(ev.avg_jct - di.avg_jct) / max(di.avg_jct, 1e-9)
+        mk_d = abs(ev.makespan - di.makespan) / max(di.makespan, 1e-9)
+        rows.append({
+            "name": f"sim_parity/{sched_name}",
+            "us_per_call": jct_d * 1e6,
+            "derived": {
+                "avg_jct_delta_pct": round(jct_d * 100, 4),
+                "makespan_delta_pct": round(mk_d * 100, 4),
+                "pass_1pct": bool(jct_d < 0.01 and mk_d < 0.01),
+            }})
+    return rows
+
+
+def scale_row(cache, smoke=False) -> dict:
+    if smoke:
+        spec, n_jobs, hours, trials = SMOKE_SPEC, 40, 4.0, 1
+    else:
+        spec, n_jobs, hours, trials = HETERO_SPEC, 500, 24.0, 2
+    jobs = trace.philly(n_jobs=n_jobs, hours=hours, seed=1, load_scale=2.0,
+                        gpu_types=[t for t, _ in spec])
+    make_cluster = lambda: hetero_cluster(spec)  # noqa: E731
+    _prewarm(make_cluster(), jobs, cache)
+    t_ev, ev = _timed(make_cluster, jobs, cache, "event", trials)
+    t_di, di = _timed(make_cluster, jobs, cache, "discrete", trials)
+    speedup = t_di / max(t_ev, 1e-9)
+    jct_d = abs(ev.avg_jct - di.avg_jct) / max(di.avg_jct, 1e-9)
+    gpus = sum(n for _, n in spec) * 8
+    return {
+        "name": f"sim_scale/{gpus}g_{len(jobs)}j_hetero",
+        "us_per_call": t_ev * 1e6,
+        "derived": {
+            "event_s": round(t_ev, 2),
+            "discrete_s": round(t_di, 2),
+            "speedup": round(speedup, 1),
+            "event_sched_calls": ev.n_sched_calls,
+            "discrete_sched_calls": di.n_sched_calls,
+            "n_events": ev.n_events,
+            "avg_jct_delta_pct": round(jct_d * 100, 4),
+            "avg_jct_h": round(ev.avg_jct / 3600, 3),
+            "makespan_h": round(ev.makespan / 3600, 2),
+            "pass_5x": bool(speedup >= 5.0) if not smoke else None,
+        }}
+
+
+def run(smoke: bool = False) -> list[dict]:
+    cache: dict = {}
+    if smoke:
+        return parity_rows(cache, n_jobs=10, n_nodes=2) + \
+            [scale_row(cache, smoke=True)]
+    return parity_rows(cache) + [scale_row(cache)]
+
+
+if __name__ == "__main__":
+    for row in run(smoke="--smoke" in sys.argv[1:]):
+        print(row["name"], row["derived"])

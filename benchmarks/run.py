@@ -21,6 +21,7 @@ BENCHES = [
     "bench_fig10_fig11_simulation",
     "bench_fig9_accuracy",
     "bench_sched_overhead",
+    "bench_sim_scale",
     "bench_roofline",
 ]
 

@@ -75,39 +75,46 @@ class _FixedPlanScheduler(RubickScheduler):
     def _gang_place(self, js: JobState, active, cluster, now) -> bool:
         need = js.job.req_gpus
         used = used_per_node([j for j in active if j is not js])
-        placement = {}
-        got = 0
-        for node in cluster.nodes:
-            fg, fc, fm = node.free(used)
-            take = min(fg, need - got)
-            if take > 0:
-                placement[node.id] = (take, min(fc, self.cfg.cpus_per_gpu
-                                                * take), 0.0)
-                got += take
-            if got >= need:
-                break
-        if got < need:
-            return False
-        plan = self._job_plan(js, got, cluster)
-        if plan is None:
-            return False
-        js.placement = placement
-        js.alloc = Alloc(got, sum(c for _, c, _ in placement.values()),
-                         gpus_per_node=js.gpus_per_node_tuple())
-        js.plan = plan
-        js.status = "running"
-        js.start_time = now if js.start_time is None else js.start_time
-        return True
+        # one GPU-type group at a time (gangs never span GPU models);
+        # homogeneous clusters see a single anonymous group, i.e. the
+        # classic full-cluster walk
+        for nodes, env in self._group_order(js, cluster):
+            placement = {}
+            got = 0
+            for node in nodes:
+                fg, fc, fm = node.free(used)
+                take = min(fg, need - got)
+                if take > 0:
+                    placement[node.id] = (take, min(fc, self.cfg.cpus_per_gpu
+                                                    * take), 0.0)
+                    got += take
+                if got >= need:
+                    break
+            if got < need:
+                continue
+            plan = self._job_plan(js, got, cluster, env)
+            if plan is None:
+                continue
+            js.placement = placement
+            js.alloc = Alloc(got, sum(c for _, c, _ in placement.values()),
+                             gpus_per_node=js.gpus_per_node_tuple())
+            js.plan = plan
+            js.status = "running"
+            js.start_time = now if js.start_time is None else js.start_time
+            return True
+        return False
 
-    def _job_plan(self, js: JobState, gpus: int, cluster: Cluster):
+    def _job_plan(self, js: JobState, gpus: int, cluster: Cluster,
+                  env=None):
+        env = env or self.env
         plan = js.job.orig_plan
         if plan.n_gpus > gpus:
             return None
         if not memory.feasible(js.job.profile, plan,
                                Alloc(gpus, self.cfg.cpus_per_gpu * gpus),
-                               self.env):
+                               env):
             # fall back to any feasible plan (jobs must be runnable)
-            pt = self.curve(js, cluster).best_plan_at_most(gpus)
+            pt = self.curve(js, cluster, env).best_plan_at_most(gpus)
             return pt.plan
         return plan
 
@@ -121,7 +128,7 @@ class SynergyLike(_FixedPlanScheduler):
         if not ok:
             return False
         # CPU-sensitivity tuning: offload-style jobs get extra CPUs
-        curve = self.curve(js, cluster)
+        curve = self.curve(js, cluster, self._placed_env(js, cluster))
         g = js.total_gpus
         if curve.slope_cpu(g, js.total_cpus) > 0:
             used = used_per_node([j for j in active if j is not js])
@@ -164,14 +171,30 @@ class AntManLike(_FixedPlanScheduler):
                 # preempt best-effort jobs to honor the resource guarantee
                 be = [j for j in active if j.status == "running"
                       and not j.job.guaranteed]
+                preempted: list[tuple] = []
+                placed = False
                 for victim in be:
+                    preempted.append((victim, dict(victim.placement),
+                                      victim.plan, victim.alloc,
+                                      victim.n_reconfig))
                     victim.status = "queued"
                     victim.placement = {}
                     victim.plan = None
                     victim.alloc = None
                     victim.n_reconfig += 1
                     if self._gang_place(js, active, cluster, now):
+                        placed = True
                         break
+                if not placed:
+                    # bugfix: evicting every best-effort job and STILL not
+                    # placing the guaranteed one left all victims evicted
+                    # for zero gain — roll the useless preemptions back
+                    for victim, placement, plan, alloc, n_rcfg in preempted:
+                        victim.status = "running"
+                        victim.placement = placement
+                        victim.plan = plan
+                        victim.alloc = alloc
+                        victim.n_reconfig = n_rcfg
         queued_be = sorted([j for j in active if j.status == "queued"
                             and not j.job.guaranteed],
                            key=lambda j: j.job.submit)

@@ -1,11 +1,18 @@
 """Cluster / job state shared by the Rubick scheduler, baselines, and the
-discrete-time simulator (paper Sec 5 + 7.3)."""
+simulator (paper Sec 5 + 7.3 + 7.4).
+
+Clusters may be heterogeneous: every node carries a ``gpu_model`` tag, and
+``Cluster.envs`` maps each tag to the per-type ``Env`` (bandwidth tiers,
+device memory, compute rate — see ``perfmodel.GPU_TYPES``).  A homogeneous
+cluster has an empty ``envs`` dict and a single anonymous type group, so
+schedulers written against type groups behave exactly as before."""
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from repro.core.perfmodel import Alloc, FitParams, ModelProfile
+from repro.core.perfmodel import (Alloc, Env, FitParams, ModelProfile,
+                                  env_for_gpu)
 from repro.parallel.plan import ExecutionPlan
 
 
@@ -15,6 +22,7 @@ class Node:
     gpus: int = 8
     cpus: int = 96
     mem: float = 1600e9
+    gpu_model: str = ""              # "" = the cluster's default type
 
     def free(self, used: dict[int, tuple[int, int, float]]) -> tuple[int, int, float]:
         g = c = 0
@@ -30,14 +38,59 @@ class Cluster:
     gpus_per_node: int = 8
     cpus_per_node: int = 96
     mem_per_node: float = 1600e9
+    envs: dict[str, Env] = field(default_factory=dict)
 
     def __post_init__(self):
         self.nodes = [Node(i, self.gpus_per_node, self.cpus_per_node,
                            self.mem_per_node) for i in range(self.n_nodes)]
+        self._groups: dict[str, list[Node]] | None = None
+        self._total_gpus: int | None = None
 
     @property
     def total_gpus(self) -> int:
-        return self.n_nodes * self.gpus_per_node
+        if self._total_gpus is None:
+            self._total_gpus = sum(n.gpus for n in self.nodes)
+        return self._total_gpus
+
+    @property
+    def is_hetero(self) -> bool:
+        return bool(self.envs)
+
+    def env_for(self, nid: int, default: Env | None = None) -> Env | None:
+        """Per-type Env of one node (``default`` for untagged nodes)."""
+        return self.envs.get(self.nodes[nid].gpu_model, default)
+
+    def type_groups(self) -> dict[str, list[Node]]:
+        """Nodes bucketed by GPU model, insertion-ordered (cached — node
+        geometry is fixed after construction).  Homogeneous clusters yield
+        one anonymous group containing every node."""
+        if self._groups is None:
+            groups: dict[str, list[Node]] = {}
+            for node in self.nodes:
+                groups.setdefault(node.gpu_model, []).append(node)
+            self._groups = groups
+        return self._groups
+
+
+def hetero_cluster(spec: list[tuple[str, int]], gpus_per_node: int = 8,
+                   cpus_per_node: int = 96, mem_per_node: float = 1600e9,
+                   base_env: Env | None = None) -> Cluster:
+    """Build a mixed-GPU cluster from ``[(gpu_model, n_nodes), ...]``.
+
+    Node ids stay dense (id == index) so placements keep indexing
+    ``cluster.nodes`` directly; ``cluster.envs`` gets one per-type Env
+    derived from ``base_env`` via ``perfmodel.GPU_TYPES``."""
+    n_total = sum(n for _, n in spec)
+    cluster = Cluster(n_nodes=n_total, gpus_per_node=gpus_per_node,
+                      cpus_per_node=cpus_per_node, mem_per_node=mem_per_node)
+    nid = 0
+    for gpu_model, n in spec:
+        cluster.envs[gpu_model] = env_for_gpu(gpu_model, base_env)
+        for _ in range(n):
+            cluster.nodes[nid].gpu_model = gpu_model
+            nid += 1
+    cluster._groups = None               # retag invalidates the group cache
+    return cluster
 
 
 @dataclass
@@ -53,6 +106,8 @@ class Job:
     orig_plan: ExecutionPlan
     guaranteed: bool = True
     tenant: str = "A"
+    gpu_type: str = ""               # hetero traces: required GPU model
+                                     # ("" = schedulable on any type)
 
 
 # placement: node id -> (gpus, cpus, mem)
@@ -77,11 +132,17 @@ class JobState:
 
     @property
     def total_gpus(self) -> int:
-        return sum(g for g, _, _ in self.placement.values())
+        t = 0
+        for v in self.placement.values():
+            t += v[0]
+        return t
 
     @property
     def total_cpus(self) -> int:
-        return sum(c for _, c, _ in self.placement.values())
+        t = 0
+        for v in self.placement.values():
+            t += v[1]
+        return t
 
     def gpus_per_node_tuple(self) -> tuple[int, ...]:
         return tuple(sorted((g for g, _, _ in self.placement.values()

@@ -59,11 +59,16 @@ class AnalyticOracle:
         self.env = self.env or Env()
 
     def measure(self, profile: ModelProfile, plan: ExecutionPlan,
-                alloc: Alloc, seed: int = 0) -> float:
-        if not memory.feasible(profile, plan, alloc, self.env):
+                alloc: Alloc, seed: int = 0,
+                env: Env | None = None) -> float:
+        """``env`` overrides the oracle's default environment — the
+        simulator passes the per-GPU-type Env of the nodes actually
+        hosting the job on heterogeneous clusters."""
+        env = env or self.env
+        if not memory.feasible(profile, plan, alloc, env):
             return float("inf")
         k = true_params(profile.name)
-        t = predict_titer(profile, plan, alloc, self.env, k)
+        t = predict_titer(profile, plan, alloc, env, k)
         if not math.isfinite(t):
             return float("inf")
         # plan-family wiggle: the truth is not exactly the model's form
@@ -74,8 +79,9 @@ class AnalyticOracle:
         noise = float(rng.lognormal(0.0, self.noise))
         return t * w * noise
 
-    def throughput(self, profile, plan, alloc, seed: int = 0) -> float:
-        t = self.measure(profile, plan, alloc, seed)
+    def throughput(self, profile, plan, alloc, seed: int = 0,
+                   env: Env | None = None) -> float:
+        t = self.measure(profile, plan, alloc, seed, env=env)
         return profile.b / t if math.isfinite(t) and t > 0 else 0.0
 
     # ------------------------------------------------------------------

@@ -20,7 +20,7 @@ minimizing RMSLE, exactly as Sec 4.3 prescribes.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import numpy as np
 
@@ -45,6 +45,29 @@ class Env:
     gpu_mem: float = 80e9         # A800-80GB
     host_mem: float = 1600e9
     gpu_flops: float = 312e12     # A800 bf16 peak
+
+
+# Per-GPU-type environments for heterogeneous pools (Sec 7.4-style cluster
+# simulation over mixed GPU generations, as Pollux/Sia do).  Each type is
+# the baseline A800 ``Env`` with only the fields that actually differ across
+# generations replaced: compute rate, device memory, and bandwidth tiers.
+# ``SensitivityCurve``s are keyed by ``Env`` (see ``core/sensitivity.py``),
+# so each type gets its own curve family automatically.
+GPU_TYPES: dict[str, dict] = {
+    "a800":     {},                                       # the baseline Env
+    "h800":     dict(gpu_flops=990e12, B_pcie=64e9),
+    "a100-40g": dict(gpu_mem=40e9),
+    "v100":     dict(gpu_flops=125e12, gpu_mem=32e9, B_intra=150e9,
+                     B_inter=25e9, B_pcie=16e9),
+}
+
+
+def env_for_gpu(gpu_model: str, base: Env | None = None) -> Env:
+    """The per-type ``Env`` for one GPU model, derived from ``base``."""
+    if gpu_model not in GPU_TYPES:
+        raise KeyError(f"unknown GPU type {gpu_model!r}; "
+                       f"known: {sorted(GPU_TYPES)}")
+    return replace(base or Env(), **GPU_TYPES[gpu_model])
 
 
 @dataclass(frozen=True)

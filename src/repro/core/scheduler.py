@@ -28,18 +28,6 @@ DELTA_GPU = 1
 CPUS_PER_GPU = 12
 
 
-def _node_usage(jobs: list[JobState], nid: int) -> tuple[int, int, float]:
-    g = c = 0
-    m = 0.0
-    for js in jobs:
-        if nid in js.placement:
-            pg, pc, pm = js.placement[nid]
-            g += pg
-            c += pc
-            m += pm
-    return g, c, m
-
-
 @dataclass
 class SchedulerConfig:
     cpus_per_gpu: int = CPUS_PER_GPU
@@ -63,25 +51,53 @@ class RubickScheduler:
         self.env = env or Env()
         self.cfg = cfg or SchedulerConfig()
         self.quotas = quotas or {}
+        # identity-keyed hot caches: profiles / fitted params / envs are
+        # interned (paper_models.TABLE2, the simulator's fit_cache, the
+        # cluster's env dict), so id()-tuples avoid re-hashing dataclasses
+        # on every curve lookup in the inner scheduling loops
+        self._curve_memo: dict[tuple, SensitivityCurve] = {}
+        self._order_memo: dict[tuple, list] = {}
 
     # ------------------------------------------------------------------
-    def curve(self, js: JobState, cluster: Cluster) -> SensitivityCurve:
+    def curve(self, js: JobState, cluster: Cluster,
+              env: Env | None = None) -> SensitivityCurve:
         """Shared process-wide curve (see sensitivity.CurveCache): jobs of
         the same model type + fitted params reuse one materialized
-        envelope across scheduler instances and the simulator."""
-        return get_curve(js.job.profile, js.fitted, self.env,
-                         max_gpus=cluster.total_gpus,
-                         cpus_per_gpu=self.cfg.cpus_per_gpu,
-                         max_ga=self.cfg.max_ga,
-                         engine=self.cfg.curve_engine)
+        envelope across scheduler instances and the simulator.  ``env``
+        selects the per-GPU-type curve on heterogeneous clusters."""
+        env = env or self.env
+        key = (id(js.job.profile), id(js.fitted), id(env),
+               cluster.total_gpus)
+        c = self._curve_memo.get(key)
+        if c is None:
+            c = self._curve_memo[key] = get_curve(
+                js.job.profile, js.fitted, env,
+                max_gpus=cluster.total_gpus,
+                cpus_per_gpu=self.cfg.cpus_per_gpu,
+                max_ga=self.cfg.max_ga,
+                engine=self.cfg.curve_engine)
+        return c
+
+    def _placed_env(self, js: JobState, cluster: Cluster) -> Env:
+        """The Env of the GPU type a job is currently placed on (single
+        type by construction); the scheduler default when unplaced."""
+        if cluster.is_hetero and js.placement:
+            nid = next(iter(js.placement))
+            return cluster.env_for(nid, self.env) or self.env
+        return self.env
 
     def _ensure_min_res(self, js: JobState, cluster: Cluster) -> None:
         if js.min_res is not None:
             return
-        curve = self.curve(js, cluster)
+        # a job pinned to a GPU type gets its baseline (and hence minRes)
+        # under THAT type's Env — an A800 baseline is unreachable on a
+        # V100 pool and would count phantom guarantee violations
+        env = cluster.envs.get(js.job.gpu_type, self.env) \
+            if js.job.gpu_type else self.env
+        curve = self.curve(js, cluster, env)
         alloc = Alloc(js.job.req_gpus, js.job.req_cpus)
         base = predict_throughput(js.job.profile, js.job.orig_plan, alloc,
-                                  self.env, js.fitted)
+                                  env, js.fitted)
         if not math.isfinite(base):
             base = 0.0
         js.baseline_perf = base
@@ -103,6 +119,21 @@ class RubickScheduler:
         for js in active:
             self._ensure_min_res(js, cluster)
 
+        # pass-wide incremental state: per-node usage of every RUNNING job
+        # and a per-node resident index (soft — stale members are filtered
+        # by the slope scans), so walks stop re-scanning the full job list
+        running = [j for j in active if j.status == "running"]
+        used = used_per_node(running)
+        by_node: dict[int, list[JobState]] = {}
+        for j in running:
+            for nid in j.placement:
+                by_node.setdefault(nid, []).append(j)
+        # failed-walk dedup: a failed walk is side-effect-free (shrinks are
+        # rolled back), so until some commit changes cluster state, a
+        # queued job with the same (model type, fitted, gpu_type, minRes,
+        # request) signature will fail identically — skip the re-walk
+        self._failed_sigs: set[tuple] = set()
+
         # --- lines 2-3: privileged queued guaranteed jobs within quota ----
         queued_g = [j for j in active if j.status == "queued"
                     and j.job.guaranteed]
@@ -110,7 +141,7 @@ class RubickScheduler:
         for js in queued_g:
             if not self._quota_ok(js, jobs):
                 continue
-            self._schedule_job(js, active, cluster, now)
+            self._schedule_job(js, active, cluster, now, used, by_node)
 
         # --- lines 4-5: best-effort + running, by descending slope --------
         rest = [j for j in active
@@ -122,16 +153,20 @@ class RubickScheduler:
             # anti-starvation: long-queued best-effort jobs first
             starved = [j for j in rest if j.status == "queued"
                        and now - j.job.submit > self.cfg.starvation_s]
-            rest = starved + [j for j in rest if j not in starved]
+            if starved:
+                starved_ids = {id(j) for j in starved}
+                rest = starved + [j for j in rest
+                                  if id(j) not in starved_ids]
             for js in rest:
-                self._schedule_job(js, active, cluster, now)
+                self._schedule_job(js, active, cluster, now, used, by_node)
         else:
             for js in rest:
                 if js.status == "queued":
-                    self._schedule_job(js, active, cluster, now)
+                    self._schedule_job(js, active, cluster, now, used,
+                                       by_node)
 
     def _sort_slopes(self, js: JobState, cluster: Cluster):
-        c = self.curve(js, cluster)
+        c = self.curve(js, cluster, self._placed_env(js, cluster))
         g = js.total_gpus
         return (c.slope_gpu(g), c.slope_cpu(g or 1, js.total_cpus or 1))
 
@@ -139,110 +174,259 @@ class RubickScheduler:
         quota = self.quotas.get(js.job.tenant)
         if quota is None:
             return True
-        used = sum(j.min_res[0] if j.min_res else j.job.req_gpus
+        # live accounting (bugfix): grown allocations hold real GPUs far
+        # beyond minRes, so charge tenants what their running guaranteed
+        # jobs actually occupy, not the minRes floor
+        used = sum(j.total_gpus
                    for j in jobs
                    if j.status == "running" and j.job.guaranteed
                    and j.job.tenant == js.job.tenant)
         need = js.min_res[0] if js.min_res else js.job.req_gpus
         return used + need <= quota
 
+    def _quota_room(self, js: JobState, active: list[JobState]) -> int | None:
+        """GPUs this guaranteed job may hold without pushing its tenant
+        over quota: quota − live usage of its other running guaranteed
+        jobs − minRes reserved for its queued guaranteed jobs (so growth
+        never starves same-tenant admissions)."""
+        quota = self.quotas.get(js.job.tenant)
+        if quota is None or not js.job.guaranteed:
+            return None
+        held = reserved = 0
+        for j in active:
+            if j is js or not j.job.guaranteed \
+                    or j.job.tenant != js.job.tenant:
+                continue
+            if j.status == "running":
+                held += j.total_gpus
+            elif j.status == "queued":
+                reserved += j.min_res[0] if j.min_res else j.job.req_gpus
+        return max(quota - held - reserved, 0)
+
     # ------------------------------------------------------------------
     def _schedule_job(self, js: JobState, active: list[JobState],
-                      cluster: Cluster, now: float) -> None:
-        """ScheduleJob (lines 6-24): greedy node walk with shrink."""
-        curve = self.curve(js, cluster)
-        min_g, min_c = js.min_res
-        target_g = self._target_gpus(js, curve, cluster)
-        if target_g <= 0:
-            return
+                      cluster: Cluster, now: float,
+                      used: dict | None = None,
+                      by_node: dict | None = None) -> None:
+        """ScheduleJob (lines 6-24): greedy node walk with shrink, one GPU
+        type group at a time (placements never span GPU types).  ``used``
+        is the pass-wide per-node usage of all running jobs and ``by_node``
+        the per-node resident index; both are updated in place when this
+        job commits (so later jobs in the same pass see the new state) and
+        left untouched on failure."""
         if js.status == "running" and not self.cfg.reallocate_resources:
             return
+        # reconfiguration-penalty time gate (Sec 5.2), evaluated BEFORE the
+        # walk (bugfix): if a running job cannot pay another pause yet, no
+        # new assignment can be committed, so never shrink victims for it
+        if js.status == "running" and not self._reconfig_gate(js):
+            return
+        # the memo is only valid inside one schedule() pass (which resets
+        # it); direct calls with used=None bypass it
+        failed = getattr(self, "_failed_sigs", None) \
+            if used is not None else None
+        sig = None
+        if failed is not None and js.status == "queued":
+            sig = (id(js.job.profile), id(js.fitted), js.job.gpu_type,
+                   js.min_res, js.job.req_gpus, js.job.tenant)
+            if sig in failed:
+                return
+        if used is None:
+            others = [j for j in active
+                      if j is not js and j.status == "running"]
+            base = used_per_node(others)
+            by_node = {}
+            for j in others:
+                for nid in j.placement:
+                    by_node.setdefault(nid, []).append(j)
+        else:
+            base = dict(used)
+            for nid, (g, c, m) in js.placement.items():
+                ug, uc, um = base[nid]
+                base[nid] = (ug - g, uc - c, um - m)
+        for nodes, env in self._group_order(js, cluster):
+            curve = self.curve(js, cluster, env)
+            min_g = js.min_res[0] if js.min_res else js.job.req_gpus
+            target_g = self._target_gpus(js, curve, cluster, active)
+            if target_g <= 0:
+                return
+            wu = dict(base)              # walk-local copy, mutated by shrinks
+            placement, got_g, got_c, shrunk = self._walk_group(
+                js, by_node, nodes, cluster, env, curve, target_g, min_g, wu)
+            # lines 19-24: commit if ≥ minRes
+            was = (js.status, js.plan, js.alloc, js.placement)
+            if got_g >= max(min_g, 1) and self._commit(
+                    js, curve, env, cluster, wu, placement,
+                    got_g, got_c, now):
+                if used is not None:
+                    # fold the walk's surviving shrinks + the new placement
+                    # back into the pass-wide usage map + resident index
+                    used.clear()
+                    used.update(wu)
+                    for nid, (g, c, m) in js.placement.items():
+                        ug, uc, um = used.get(nid, (0, 0, 0.0))
+                        used[nid] = (ug + g, uc + c, um + m)
+                        res = by_node.setdefault(nid, [])
+                        if js not in res:
+                            res.append(js)
+                if failed is not None and \
+                        (shrunk or was != (js.status, js.plan, js.alloc,
+                                           js.placement)):
+                    failed.clear()       # cluster state changed
+                return
+            self._undo(shrunk)
+        if sig is not None:
+            failed.add(sig)
 
-        others = [j for j in active if j is not js and j.status == "running"]
+    def _group_order(self, js: JobState, cluster: Cluster,
+                     ) -> list[tuple[list, Env]]:
+        """GPU-type groups to try, best predicted throughput first; a job
+        with a required ``gpu_type`` only sees matching nodes.  Homogeneous
+        clusters yield one anonymous group — the classic full-node walk.
+        Memoized per (model type, fitted, gpu_type, request): node
+        geometry and curves are fixed, so the ranking never changes."""
+        groups = cluster.type_groups()
+        if not cluster.is_hetero:
+            return [(nodes, self.env) for nodes in groups.values()]
+        key = (id(js.job.profile), id(js.fitted), js.job.gpu_type,
+               js.job.req_gpus, id(cluster))
+        hit = self._order_memo.get(key)
+        if hit is not None:
+            return hit[1]
+        want = js.job.gpu_type
+        ranked = []
+        for model, nodes in groups.items():
+            if want and model != want:
+                continue
+            env = cluster.envs.get(model, self.env)
+            cap = sum(n.gpus for n in nodes)
+            thpt = self.curve(js, cluster, env).throughput(
+                min(js.job.req_gpus, cap))
+            ranked.append((thpt, len(ranked), nodes, env))
+        ranked.sort(key=lambda r: (-r[0], r[1]))
+        order = [(nodes, env) for _, _, nodes, env in ranked]
+        # the stored cluster reference pins its id() for the memo's
+        # lifetime (clusters are not interned like profiles/envs are)
+        self._order_memo[key] = (cluster, order)
+        return order
+
+    def _walk_group(self, js: JobState, by_node: dict, nodes: list,
+                    cluster: Cluster, env: Env, curve: SensitivityCurve,
+                    target_g: int, min_g: int, wu: dict,
+                    ) -> tuple[Placement, int, int, dict]:
+        """Greedy walk over one type group (lines 7-18).  ``wu`` is the
+        walk-local per-node usage of the OTHER running jobs and ``by_node``
+        the (soft) per-node resident index; shrinks update ``wu`` in
+        place.  Returns the tentative placement plus pre-shrink snapshots
+        of every mutated victim so a failed walk can be rolled back."""
         placement: Placement = {}
         got_g = got_c = 0
         my_slope = curve.slope_gpu(0 if js.status == "queued"
                                    else js.total_gpus)
-
-        shrunk: list[tuple[JobState, int]] = []
-        used = used_per_node(others)
-        for node in cluster.nodes:
+        shrunk: dict[int, tuple] = {}
+        for node in nodes:
             if got_g >= target_g:
                 break
-            fg, fc, fm = node.free(used)
+            fg, fc, fm = node.free(wu)
             take_g = min(fg, target_g - got_g)
             take_c = min(fc, self.cfg.cpus_per_gpu * take_g)
-            # lines 8-16: reclaim from the least-sensitive over-min job
+            # lines 8-16: reclaim from the least-sensitive over-min job;
+            # candidates come from the soft resident index (stale members
+            # and the walking job itself are filtered in the slope scan)
             while take_g < min(node.gpus, target_g - got_g) \
                     and self.cfg.reallocate_resources:
-                victim = self._lowest_slope_over_min(others, node.id, cluster)
+                victim = self._lowest_slope_over_min(
+                    by_node.get(node.id, ()), node.id, cluster, env,
+                    exclude=js)
                 if victim is None:
                     break
-                v_curve = self.curve(victim, cluster)
+                v_curve = self.curve(victim, cluster, env)
                 v_slope = v_curve.slope_gpu_down(victim.total_gpus)
                 need_min = got_g + take_g < min_g
                 if not (my_slope > v_slope or need_min):
                     break
-                self._shrink(victim, node.id, cluster)
-                shrunk.append((victim, node.id))
-                # shrinks only touch this node: refresh its usage in place
-                used[node.id] = _node_usage(others, node.id)
-                fg, fc, fm = node.free(used)
+                if id(victim) not in shrunk:
+                    shrunk[id(victim)] = (victim, dict(victim.placement),
+                                          victim.plan, victim.alloc,
+                                          victim.status, victim.n_reconfig)
+                dg, dc, dm = self._shrink(victim, node.id, cluster, env)
+                ug, uc, um = wu.get(node.id, (0, 0, 0.0))
+                wu[node.id] = (ug - dg, uc - dc, um - dm)
+                fg, fc, fm = node.free(wu)
                 take_g = min(fg, target_g - got_g)
                 take_c = min(fc, self.cfg.cpus_per_gpu * take_g)
             if take_g > 0:
                 placement[node.id] = (take_g, take_c, 0.0)
                 got_g += take_g
                 got_c += take_c
+        return placement, got_g, got_c, shrunk
 
-        # lines 19-24: commit if ≥ minRes
-        if got_g >= max(min_g, 1):
-            pernode = tuple(sorted((g for g, _, _ in placement.values()),
-                                   reverse=True))
-            if self.cfg.reconfigure_plans:
-                pt = curve.best_plan_at_most(got_g, got_c,
-                                             gpus_per_node=pernode)
-                plan = pt.plan
-            else:
-                plan = self._fixed_plan(js, got_g)
-            if plan is None:
-                self._undo(shrunk, js)
-                return
-            alloc = Alloc(got_g, got_c, gpus_per_node=pernode)
-            est = memory.estimate(js.job.profile, plan, alloc, self.env)
-            if est.gpu_bytes > self.env.gpu_mem:       # AllocMem failure
-                self._undo(shrunk, js)
-                return
-            # reconfiguration penalty guard (Sec 5.2)
-            if js.status == "running" and not self._reconfig_ok(js, plan,
-                                                                alloc, now):
-                return
-            for nid in placement:
-                g, c, _ = placement[nid]
-                placement[nid] = (g, c, est.host_bytes / max(len(placement), 1))
-            changed = (plan != js.plan or alloc != js.alloc)
-            js.placement = placement
-            js.alloc = alloc
-            js.plan = plan
-            if js.status == "queued":
-                js.status = "running"
-                js.start_time = now if js.start_time is None else js.start_time
-            elif changed:
-                js.n_reconfig += 1
+    def _commit(self, js: JobState, curve: SensitivityCurve, env: Env,
+                cluster: Cluster, wu: dict, placement: Placement,
+                got_g: int, got_c: int, now: float) -> bool:
+        """AllocMem + plan selection + state mutation (lines 19-24).
+        ``wu`` is the post-walk per-node usage of the other running jobs.
+        Returns False (mutating nothing) when the assignment is
+        infeasible, so the caller can roll back the walk's shrinks."""
+        pernode = tuple(sorted((g for g, _, _ in placement.values()),
+                               reverse=True))
+        if self.cfg.reconfigure_plans:
+            pt = curve.best_plan_at_most(got_g, got_c, gpus_per_node=pernode)
+            plan = pt.plan
         else:
-            self._undo(shrunk, js)
+            plan = self._fixed_plan(js, got_g, env)
+        if plan is None:
+            return False
+        alloc = Alloc(got_g, got_c, gpus_per_node=pernode)
+        est = memory.estimate(js.job.profile, plan, alloc, env)
+        if est.gpu_bytes > env.gpu_mem:                # AllocMem failure
+            return False
+        # per-node host-memory fit (bugfix): the committed placement writes
+        # est.host_bytes/len(placement) into every node; verify each node
+        # can actually hold its share before mutating any state, or stacked
+        # offload jobs over-allocate host memory
+        host_share = est.host_bytes / max(len(placement), 1)
+        for nid in placement:
+            if host_share > cluster.nodes[nid].free(wu)[2] + 1e-3:
+                return False
+        # reconfiguration penalty guard (Sec 5.2)
+        if js.status == "running" and not self._reconfig_ok(js, plan,
+                                                            alloc, now):
+            return False
+        for nid in placement:
+            g, c, _ = placement[nid]
+            placement[nid] = (g, c, host_share)
+        changed = (plan != js.plan or alloc != js.alloc)
+        js.placement = placement
+        js.alloc = alloc
+        js.plan = plan
+        if js.status == "queued":
+            js.status = "running"
+            js.start_time = now if js.start_time is None else js.start_time
+        elif changed:
+            js.n_reconfig += 1
+        return True
 
     # ------------------------------------------------------------------
     def _target_gpus(self, js: JobState, curve: SensitivityCurve,
-                     cluster: Cluster) -> int:
-        """Grow while the slope is positive, up to cluster size."""
+                     cluster: Cluster, active: list[JobState]) -> int:
+        """Grow while the slope is positive, up to cluster size — capped by
+        the tenant's remaining quota room (bugfix: unbounded growth let a
+        tenant exceed its quota in actually-held GPUs)."""
         if not self.cfg.reallocate_resources:
             return js.job.req_gpus
-        return curve.grow_target(js.job.req_gpus, cluster.total_gpus)
+        target = curve.grow_target(js.job.req_gpus, cluster.total_gpus)
+        room = self._quota_room(js, active)
+        if room is not None:
+            min_g = js.min_res[0] if js.min_res else js.job.req_gpus
+            target = min(target, max(room, min_g, 1))
+        return target
 
-    def _fixed_plan(self, js: JobState, gpus: int) -> ExecutionPlan | None:
+    def _fixed_plan(self, js: JobState, gpus: int,
+                    env: Env | None = None) -> ExecutionPlan | None:
         """Rubick-R: keep the plan family, scale only the DP size (Sia's
         approach for 3D-parallel jobs)."""
+        env = env or self.env
         orig = js.job.orig_plan
         tp_pp = orig.tp * orig.pp
         if gpus % tp_pp:
@@ -252,33 +436,43 @@ class RubickScheduler:
             return None
         plan = orig.with_(dp=d)
         alloc = Alloc(gpus, self.cfg.cpus_per_gpu * gpus)
-        if not memory.feasible(js.job.profile, plan, alloc, self.env):
+        if not memory.feasible(js.job.profile, plan, alloc, env):
             return None
         return plan
 
-    def _lowest_slope_over_min(self, others: list[JobState], node_id: int,
-                               cluster: Cluster) -> JobState | None:
-        cands = []
-        for j in others:
-            if node_id not in j.placement or j.placement[node_id][0] <= 0:
+    def _lowest_slope_over_min(self, cands, node_id: int,
+                               cluster: Cluster, env: Env | None = None,
+                               exclude: JobState | None = None,
+                               ) -> JobState | None:
+        best = None
+        best_slope = math.inf
+        for j in cands:
+            if j is exclude or j.status != "running":
                 continue
+            p = j.placement.get(node_id)
+            if p is None or p[0] <= 0:
+                continue
+            tg = j.total_gpus
             min_g = j.min_res[0] if j.min_res else j.job.req_gpus
-            if j.total_gpus <= max(min_g, 0):
+            if tg <= max(min_g, 0):
                 continue
-            if j.total_gpus <= 0:
-                continue
-            cands.append(j)
-        if not cands:
-            return None
-        return min(cands, key=lambda j: self.curve(j, cluster)
-                   .slope_gpu_down(j.total_gpus))
+            slope = self.curve(j, cluster, env).slope_gpu_down(tg)
+            if slope < best_slope:
+                best_slope, best = slope, j
+        return best
 
-    def _shrink(self, victim: JobState, node_id: int, cluster: Cluster):
+    def _shrink(self, victim: JobState, node_id: int, cluster: Cluster,
+                env: Env | None = None) -> tuple[int, int, float]:
+        """Take ΔGPU from the victim on one node.  Returns the (gpus,
+        cpus, mem) freed there so walk-local usage maps can be updated
+        without re-scanning every job."""
         g, c, m = victim.placement[node_id]
         dg = min(DELTA_GPU, g)
         dc = min(self.cfg.cpus_per_gpu * dg, c)
+        freed_m = 0.0
         if g - dg <= 0:
             del victim.placement[node_id]
+            freed_m = m
         else:
             victim.placement[node_id] = (g - dg, c - dc, m)
         new_g = victim.total_gpus
@@ -288,27 +482,41 @@ class RubickScheduler:
             victim.alloc = None
             victim.placement = {}
         else:
-            curve = self.curve(victim, cluster)
+            curve = self.curve(victim, cluster, env)
             pt = curve.best_plan_at_most(new_g, victim.total_cpus,
                                          victim.gpus_per_node_tuple())
             victim.plan = pt.plan if pt.plan else victim.plan
             victim.alloc = Alloc(new_g, victim.total_cpus,
                                  gpus_per_node=victim.gpus_per_node_tuple())
             victim.n_reconfig += 1
+        return dg, dc, freed_m
 
-    def _undo(self, shrunk: list, js: JobState) -> None:
-        # shrinks already mutated victims; in this greedy heuristic we keep
-        # them (they remain ≥ minRes, so guarantees hold) — matching the
-        # paper's repeated-Δr semantics.
-        return
+    def _undo(self, shrunk: dict[int, tuple]) -> None:
+        """Restore every victim mutated during a failed walk (bugfix:
+        shrinks used to persist even when the beneficiary never placed —
+        victims lost GPUs for zero cluster-wide gain)."""
+        for victim, placement, plan, alloc, status, n_rcfg in \
+                shrunk.values():
+            victim.placement = placement
+            victim.plan = plan
+            victim.alloc = alloc
+            victim.status = status
+            victim.n_reconfig = n_rcfg
 
-    def _reconfig_ok(self, js: JobState, plan, alloc, now: float) -> bool:
-        if plan == js.plan and alloc == js.alloc:
-            return True
+    def _reconfig_gate(self, js: JobState) -> bool:
+        """Time-based part of the reconfiguration-penalty guard: whether a
+        running job may pay one more checkpoint-resume pause while keeping
+        (T − N·δ)/T above the threshold.  Independent of the candidate
+        assignment, so it can gate the walk before any victim is shrunk."""
         T = max(js.run_time, 1.0)
         N = js.n_reconfig + 1
         return (T - N * self.cfg.reconfig_cost_s) / T \
             >= self.cfg.reconfig_threshold
+
+    def _reconfig_ok(self, js: JobState, plan, alloc, now: float) -> bool:
+        if plan == js.plan and alloc == js.alloc:
+            return True
+        return self._reconfig_gate(js)
 
 
 def throughput_of(js: JobState, env: Env) -> float:

@@ -73,6 +73,8 @@ class SensitivityCurve:
         self._envelope: Envelope | None = None
         self._statics: dict[int | None, dict] = {}
         self._static_evals: dict[tuple, np.ndarray] = {}
+        self._grow_memo: dict[tuple[int, int], int] = {}
+        self._slopes: list[float] | None = None
 
     # ------------------------------------------------------------------
     # batched evaluation primitives
@@ -404,21 +406,28 @@ class SensitivityCurve:
             best = max(best, pt.throughput)
         return best
 
+    def _slope_list(self) -> list[float]:
+        """Plain-float envelope steps (index g = throughput delta between
+        g and g+1 GPUs) — the scheduler's hottest lookup, precomputed once
+        per curve so the per-call cost is a list index, not numpy scalar
+        math."""
+        if self._slopes is None:
+            self._slopes = np.maximum(
+                np.diff(self.materialize().env), 0.0).tolist()
+        return self._slopes
+
     # ------------------------------------------------------------------
     def slope_gpu(self, gpus: int) -> float:
         """Throughput gain of the NEXT GPU (used to rank jobs)."""
         if gpus >= self.max_gpus:
             return 0.0
-        e = self.materialize().env
-        return max(0.0, float(e[gpus + 1] - e[max(gpus, 0)]))
+        return self._slope_list()[max(gpus, 0)]
 
     def slope_gpu_down(self, gpus: int) -> float:
         """Throughput LOST by taking one GPU away (shrink decisions)."""
         if gpus <= 0:
             return float("inf")
-        e = self.materialize().env
-        g = min(gpus, self.max_gpus)
-        return max(0.0, float(e[g] - e[g - 1]))
+        return self._slope_list()[min(gpus, self.max_gpus) - 1]
 
     def slope_cpu(self, gpus: int, cpus: int, delta: int = 4) -> float:
         if gpus <= 0:
@@ -428,15 +437,23 @@ class SensitivityCurve:
 
     def grow_target(self, gpus: int, hi: int) -> int:
         """Largest g ∈ [gpus, hi] still worth growing to: advance while the
-        next GPU improves the envelope by >0.1% (vectorized scan)."""
+        next GPU improves the envelope by >0.1% (vectorized scan, memoized
+        — curves are immutable and the scheduler asks the same (req, cap)
+        for every job of a model type on every pass)."""
         g = max(gpus, 0)
         hi = min(hi, self.max_gpus)
         if g >= hi:
             return g
+        key = (g, hi)
+        hit = self._grow_memo.get(key)
+        if hit is not None:
+            return hit
         e = self.materialize().env
         # first g' ≥ g where the next step stops paying (monotone envelope)
         flat = np.flatnonzero(e[g + 1:hi + 1] <= e[g:hi] * 1.001)
-        return g + (int(flat[0]) if flat.size else hi - g)
+        out = g + (int(flat[0]) if flat.size else hi - g)
+        self._grow_memo[key] = out
+        return out
 
 
 def min_resources(curve: SensitivityCurve, req_gpus: int, req_cpus: int,

@@ -1,13 +1,40 @@
-"""Discrete-time cluster simulator (paper Sec 7.4).
+"""Cluster simulator (paper Sec 7.4): event-driven engine + discrete loop.
 
 Jobs progress at the ORACLE's throughput (the stand-in for real cluster
 measurements — the scheduler only ever sees its own fitted model), the
-scheduler runs on every arrival/completion event, and each plan/allocation
-change pauses the job for the checkpoint-resume cost δ.
+scheduler runs on cluster-state changes, and each plan/allocation change
+pauses the job for the checkpoint-resume cost δ.
+
+Two engines share the same semantics:
+
+  * ``mode="event"`` (default) keeps a priority queue of arrival /
+    completion / pause-expiry events and advances time EXACTLY to the next
+    event.  The scheduler runs only when cluster state actually changes
+    (arrival or completion); oracle throughput is re-measured only when a
+    job's (plan, alloc, placement) changes, since the oracle is a pure
+    function of those.  Completion events are invalidated by a per-job
+    epoch counter whenever the job's assignment (and hence its finish
+    estimate) changes.
+  * ``mode="discrete"`` is the original fixed-step reference loop
+    (``dt = max(dt, 1.0)``), kept for parity pinning — the event engine
+    must reproduce its JCT/makespan within 1% on seed traces.
+
+Shared accounting fixes (previously hidden by the coarse fixed step):
+``run_time`` counts ALL wall-clock seconds in the running state including
+reconfiguration pauses (it is the T of the reconfig-penalty guard), and a
+pause expiring mid-window contributes the post-resume fraction of the
+window at the job's real throughput instead of the 0 sampled at the paused
+instant.
+
+Heterogeneous clusters: a job's true throughput is measured with the Env
+of the GPU type it is placed on (``cluster.envs``); placements never span
+GPU types (the scheduler walks one type group at a time).
 """
 
 from __future__ import annotations
 
+import heapq
+import itertools
 import math
 from dataclasses import dataclass, field
 
@@ -24,6 +51,11 @@ from repro.core.sensitivity import get_curve
 # noise so only genuine under-allocation counts.
 GUARANTEE_TOL = 0.1
 
+# event kinds, in tie-break order at one instant: arrivals and completions
+# (the state changes) are folded into a single scheduler pass, then pause
+# expiries resume jobs
+EV_ARRIVAL, EV_COMPLETION, EV_PAUSE_END = 0, 1, 2
+
 
 @dataclass
 class SimResult:
@@ -33,6 +65,8 @@ class SimResult:
     n_reconfig: int
     guarantee_violations: int
     jct_by_class: dict[str, list[float]] = field(default_factory=dict)
+    n_events: int = 0                 # event-engine: events processed
+    n_sched_calls: int = 0            # full scheduler passes
 
     @property
     def avg_jct(self) -> float:
@@ -59,13 +93,14 @@ class SimResult:
 class Simulator:
     def __init__(self, cluster: Cluster, scheduler, oracle=None,
                  env: Env | None = None, reconfig_cost: float = 78.0,
-                 fit_cache: dict | None = None):
+                 fit_cache: dict | None = None, mode: str = "event"):
         self.cluster = cluster
         self.scheduler = scheduler
         self.env = env or Env()
         self.oracle = oracle or AnalyticOracle(env=self.env)
         self.reconfig_cost = reconfig_cost
         self.fit_cache = fit_cache if fit_cache is not None else {}
+        self.mode = mode
 
     # ------------------------------------------------------------------
     def _fitted(self, job: Job) -> FitParams:
@@ -80,32 +115,190 @@ class Simulator:
                 self.fit_cache[key] = FitParams()
         return self.fit_cache[key]
 
+    def _env_of(self, js: JobState) -> Env:
+        """Env of the GPU type hosting the job (placements are single-type
+        by construction); the simulator default when unplaced/homogeneous."""
+        if self.cluster.is_hetero and js.placement:
+            nid = next(iter(js.placement))
+            return self.cluster.env_for(nid, self.env) or self.env
+        return self.env
+
     def _true_throughput(self, js: JobState) -> float:
         if js.status != "running" or js.plan is None or js.alloc is None:
             return 0.0
-        t = self.oracle.measure(js.job.profile, js.plan, js.alloc)
+        t = self.oracle.measure(js.job.profile, js.plan, js.alloc,
+                                env=self._env_of(js))
         return js.job.profile.b / t if math.isfinite(t) and t > 0 else 0.0
 
-    # ------------------------------------------------------------------
-    def run(self, jobs: list[Job], max_time: float = 7 * 86400.0,
-            ) -> SimResult:
-        states = [JobState(job=j, fitted=self._fitted(j)) for j in jobs]
-        # pre-warm the process-wide CurveCache: every job of the same model
-        # type + fitted params shares one materialized envelope with the
-        # scheduler (and any other scheduler instance in this process)
+    def _prewarm(self, states: list[JobState]) -> None:
+        """Pre-warm the process-wide CurveCache: every job of the same
+        model type + fitted params shares one materialized envelope with
+        the scheduler, per GPU-type Env on heterogeneous clusters."""
         cfg = getattr(self.scheduler, "cfg", None)
-        if cfg is not None:
-            for s in {(s.job.profile, s.fitted): s for s in states}.values():
-                get_curve(s.job.profile, s.fitted, self.env,
+        if cfg is None:
+            return
+        envs = [self.env] + list(self.cluster.envs.values())
+        for s in {(s.job.profile, s.fitted): s for s in states}.values():
+            for env in envs:
+                get_curve(s.job.profile, s.fitted, env,
                           max_gpus=self.cluster.total_gpus,
                           cpus_per_gpu=cfg.cpus_per_gpu, max_ga=cfg.max_ga,
                           engine=getattr(cfg, "curve_engine", "batch"))
+
+    # ------------------------------------------------------------------
+    def run(self, jobs: list[Job], max_time: float = 7 * 86400.0,
+            mode: str | None = None) -> SimResult:
+        mode = mode or self.mode
+        if mode == "discrete":
+            return self._run_discrete(jobs, max_time)
+        if mode != "event":
+            raise ValueError(f"unknown simulator mode {mode!r}")
+        return self._run_event(jobs, max_time)
+
+    # ------------------------------------------------------------------
+    # event-driven engine
+    # ------------------------------------------------------------------
+    def _run_event(self, jobs: list[Job], max_time: float) -> SimResult:
+        states = [JobState(job=j, fitted=self._fitted(j)) for j in jobs]
+        self._prewarm(states)
+        seq = itertools.count()
+        heap: list[tuple[float, int, int, object]] = []
+        for s in states:
+            heapq.heappush(heap, (s.job.submit, EV_ARRIVAL, next(seq), s))
+
+        active: list[JobState] = []        # arrived, not yet done
+        done: list[JobState] = []
+        pause_until: dict[int, float] = {}
+        epoch: dict[int, int] = {}         # completion-event invalidation
+        thpt: dict[int, float] = {}        # oracle samples/s per assignment
+        violations = n_events = n_sched = 0
+        t = 0.0
+
+        def advance(to: float) -> None:
+            """Integrate progress/run_time over [t, to]: throughput is
+            piecewise-constant between events, pauses contribute exactly
+            their overlap with the window (the post-resume fraction runs
+            at the job's real rate — the old fixed-step loop dropped it)."""
+            dt = to - t
+            if dt <= 0.0:
+                return
+            for s in active:
+                if s.status != "running":
+                    continue
+                s.run_time += dt           # wall-clock incl. reconfig pause
+                pu = pause_until.get(id(s), 0.0)
+                eff = dt if pu <= t else to - pu
+                if eff > 0.0:
+                    s.progress += thpt.get(id(s), 0.0) * eff \
+                        / s.job.profile.b
+
+        def resample(s: JobState, now: float) -> None:
+            """Re-measure the oracle (assignment changed) and re-arm the
+            completion event from the job's exact remaining work."""
+            th = thpt[id(s)] = self._true_throughput(s)
+            e = epoch[id(s)] = epoch.get(id(s), 0) + 1
+            if th <= 0.0:
+                return
+            remain = (s.job.target_iters - s.progress) \
+                * s.job.profile.b / th
+            start = max(now, pause_until.get(id(s), 0.0))
+            heapq.heappush(heap, (start + max(remain, 0.0),
+                                  EV_COMPLETION, next(seq), (s, e)))
+
+        def check_guarantee(s: JobState, now: float) -> int:
+            th = thpt.get(id(s), 0.0)
+            if (s.status == "running"
+                    and pause_until.get(id(s), 0.0) <= now
+                    and s.job.guaranteed and s.baseline_perf > 0.0
+                    and th < s.baseline_perf * (1.0 - GUARANTEE_TOL)):
+                return 1
+            return 0
+
+        while heap:
+            t_ev = heap[0][0]
+            if t_ev > max_time:
+                break
+            batch = []
+            while heap and heap[0][0] <= t_ev + 1e-9:
+                batch.append(heapq.heappop(heap))
+            advance(t_ev)
+            t = t_ev
+            n_events += len(batch)
+            state_changed = False
+            resumed: list[JobState] = []
+            for _, kind, _, payload in batch:
+                if kind == EV_ARRIVAL:
+                    active.append(payload)
+                    state_changed = True
+                elif kind == EV_COMPLETION:
+                    s, e = payload
+                    if epoch.get(id(s)) != e or s.status != "running":
+                        continue                       # stale event
+                    s.progress = max(s.progress, s.job.target_iters)
+                    s.status = "done"
+                    s.finish_time = t
+                    s.placement = {}
+                    active.remove(s)
+                    done.append(s)
+                    state_changed = True
+                else:                                  # EV_PAUSE_END
+                    s = payload
+                    if s.status == "running" \
+                            and pause_until.get(id(s), 0.0) <= t + 1e-9:
+                        resumed.append(s)
+
+            if state_changed:
+                prev = {id(s): (s.plan, s.alloc, s.status, s.placement)
+                        for s in active}
+                self.scheduler.schedule(active, self.cluster, t)
+                n_sched += 1
+                assert check_capacity(self.cluster, active), \
+                    "over-allocation"
+                for s in active:
+                    was = prev[id(s)]
+                    if s.status == "running":
+                        if was[2] != "running":        # (re)started
+                            resample(s, t)
+                        elif (s.plan, s.alloc) != was[:2]:
+                            pause_until[id(s)] = t + self.reconfig_cost
+                            heapq.heappush(heap, (t + self.reconfig_cost,
+                                                  EV_PAUSE_END, next(seq),
+                                                  s))
+                            resample(s, t)
+                        elif s.placement != was[3]:
+                            # migrated with identical plan+alloc: the env
+                            # (GPU type) may differ — re-measure, but no
+                            # pause (the discrete reference pauses only on
+                            # plan/alloc changes)
+                            resample(s, t)
+                    elif was[2] == "running":          # preempted
+                        epoch[id(s)] = epoch.get(id(s), 0) + 1
+                        thpt.pop(id(s), None)
+                        pause_until.pop(id(s), None)
+                # performance-guarantee accounting (paper Sec 5.1), sampled
+                # at every scheduling point for running unpaused jobs
+                for s in active:
+                    violations += check_guarantee(s, t)
+            for s in resumed:
+                violations += check_guarantee(s, t)
+
+        self.last_states = states          # inspectable by tests/benchmarks
+        return self._assemble(active + done, t, violations,
+                              n_events=n_events, n_sched=n_sched)
+
+    # ------------------------------------------------------------------
+    # discrete-time reference loop (the original polling engine)
+    # ------------------------------------------------------------------
+    def _run_discrete(self, jobs: list[Job], max_time: float) -> SimResult:
+        states = [JobState(job=j, fitted=self._fitted(j)) for j in jobs]
+        self._prewarm(states)
         arrivals = sorted(states, key=lambda s: s.job.submit)
         t = 0.0
         pending: list[JobState] = list(arrivals)
         active: list[JobState] = []
         pause_until: dict[int, float] = {}
         violations = 0
+        n_sched = 0
 
         def next_arrival() -> float:
             return pending[0].job.submit if pending else math.inf
@@ -118,6 +311,7 @@ class Simulator:
 
             prev = {id(s): (s.plan, s.alloc, s.status) for s in active}
             self.scheduler.schedule(active, self.cluster, t)
+            n_sched += 1
             assert check_capacity(self.cluster, active), "over-allocation"
             for s in active:
                 was = prev.get(id(s))
@@ -132,17 +326,15 @@ class Simulator:
                     continue
                 if pause_until.get(id(s), 0.0) > t:
                     thpts[id(s)] = 0.0
-                else:
-                    thpts[id(s)] = self._true_throughput(s)
-                    # performance-guarantee accounting (paper Sec 5.1):
-                    # a running guaranteed job must achieve at least its
-                    # baseline (requested resources + original plan) perf;
-                    # reconfiguration pauses are excluded (they are governed
-                    # by the reconfig-penalty threshold instead)
-                    if (s.job.guaranteed and s.baseline_perf > 0.0
-                            and thpts[id(s)]
-                            < s.baseline_perf * (1.0 - GUARANTEE_TOL)):
-                        violations += 1
+                    continue
+                thpts[id(s)] = self._true_throughput(s)
+                # performance-guarantee accounting (paper Sec 5.1):
+                # reconfiguration pauses are excluded (they are governed
+                # by the reconfig-penalty threshold instead)
+                if (s.job.guaranteed and s.baseline_perf > 0.0
+                        and thpts[id(s)]
+                        < s.baseline_perf * (1.0 - GUARANTEE_TOL)):
+                    violations += 1
 
             # time to next event
             dt = next_arrival() - t
@@ -163,35 +355,48 @@ class Simulator:
                 break
             dt = max(dt, 1.0)
 
-            # advance
+            # advance: pauses expiring mid-window contribute the
+            # post-resume fraction at the job's real throughput (bugfix:
+            # the old loop zeroed the whole window when the sample instant
+            # was paused), and run_time counts the full running-state
+            # window including the paused part (it is the T of the
+            # reconfig-penalty guard)
             for s in active:
                 if s.status != "running":
                     continue
-                if pause_until.get(id(s), 0.0) > t + dt - 1e-9:
-                    continue
-                eff = dt
+                s.run_time += dt
                 pu = pause_until.get(id(s), 0.0)
-                if pu > t:
-                    eff = t + dt - pu
+                eff = dt if pu <= t else t + dt - pu
+                if eff <= 0.0:
+                    continue
                 th = thpts[id(s)]
+                if pu > t:       # resumed mid-window: sample AT the resume
+                    th = self._true_throughput(s)
                 s.progress += th * eff / s.job.profile.b
-                s.run_time += eff
                 if s.progress >= s.job.target_iters - 1e-6:
                     s.status = "done"
                     s.finish_time = t + dt
                     s.placement = {}
             t += dt
 
+        self.last_states = states          # inspectable by tests/benchmarks
+        return self._assemble(active, t, violations, n_sched=n_sched)
+
+    # ------------------------------------------------------------------
+    def _assemble(self, arrived: list[JobState], t: float, violations: int,
+                  n_events: int = 0, n_sched: int = 0) -> SimResult:
         jcts = {}
-        by_class: dict[str, list[float]] = {"guaranteed": [], "best_effort": []}
+        by_class: dict[str, list[float]] = {"guaranteed": [],
+                                            "best_effort": []}
         n_rcfg = 0
-        for s in active:
+        for s in arrived:
             if s.finish_time is None:
                 s.finish_time = t                    # censored
             jcts[s.job.name] = s.finish_time - s.job.submit
             cls = "guaranteed" if s.job.guaranteed else "best_effort"
             by_class[cls].append(jcts[s.job.name])
             n_rcfg += s.n_reconfig
-        makespan = max((s.finish_time for s in active), default=0.0)
+        makespan = max((s.finish_time for s in arrived), default=0.0)
         return SimResult(getattr(self.scheduler, "name", "?"), jcts,
-                         makespan, n_rcfg, violations, by_class)
+                         makespan, n_rcfg, violations, by_class,
+                         n_events=n_events, n_sched_calls=n_sched)

@@ -1,11 +1,18 @@
-"""Synthetic trace generation (paper Sec 7.3).
+"""Synthetic trace generation (paper Sec 7.3 + 7.4).
 
 Philly-style: bursty arrivals over a window, lognormal durations, GPU
 requests from the Microsoft-trace distribution, model chosen from the
 Table-2 set.  Variants:
-  base — random feasible initial plan per job;
-  mt   — two tenants (A: 64-GPU quota, guaranteed; B: no quota, best-effort);
-  bp   — initial plan replaced with the best plan at requested resources.
+  base   — random feasible initial plan per job;
+  mt     — two tenants (A: 64-GPU quota, guaranteed; B: no quota,
+           best-effort);
+  bp     — initial plan replaced with the best plan at requested resources;
+  hetero — mixed-GPU pools: roughly half the jobs pin a GPU model from
+           ``HETERO_MIX`` (plan feasibility checked under that type's Env),
+           the rest run on any type.
+
+``philly()`` scales the same generator to production shape: 500+ jobs for
+256+ GPU clusters with the Philly long-tail duration distribution.
 """
 
 from __future__ import annotations
@@ -17,13 +24,18 @@ import numpy as np
 from repro.core import memory, paper_models
 from repro.core.cluster import Job
 from repro.core.oracle import AnalyticOracle
-from repro.core.perfmodel import Alloc, Env
+from repro.core.perfmodel import Alloc, Env, env_for_gpu
 from repro.parallel import plan_table
 from repro.parallel.plan import ExecutionPlan
 
 # Philly-like request-size distribution (Jeon et al., ATC'19)
 GPU_SIZES = [1, 2, 4, 8, 16, 32, 64]
 GPU_PROBS = [0.45, 0.15, 0.15, 0.13, 0.07, 0.03, 0.02]
+
+# GPU-model mix for the ``hetero`` variant (shares of jobs that pin each
+# type; the other half of the jobs are type-agnostic)
+HETERO_MIX = [("a800", 0.35), ("h800", 0.15), ("a100-40g", 0.25),
+              ("v100", 0.25)]
 
 
 def _feasible_plans(profile, gpus: int, env: Env, allow_tp_pp: bool,
@@ -39,10 +51,16 @@ def _feasible_plans(profile, gpus: int, env: Env, allow_tp_pp: bool,
 def generate(n_jobs: int = 60, hours: float = 12.0, seed: int = 0,
              variant: str = "base", env: Env | None = None,
              large_fraction: float | None = None,
-             load_scale: float = 1.0) -> list[Job]:
+             load_scale: float = 1.0,
+             dur_cap_hours: float = 6.0,
+             gpu_types: list[str] | None = None) -> list[Job]:
     """Returns jobs sorted by submit time.  ``load_scale`` compresses the
     arrival window (higher load); ``large_fraction`` overrides the share of
-    LLaMA-class models (paper Fig 11)."""
+    LLaMA-class models (paper Fig 11); ``dur_cap_hours`` bounds the
+    lognormal duration tail (Philly-scale traces raise it); ``gpu_types``
+    restricts the hetero variant's pinnable GPU models to the types the
+    target cluster actually has (a pin to an absent type can never be
+    scheduled)."""
     env = env or Env()
     rng = np.random.default_rng(seed)
     oracle = AnalyticOracle(env=env)
@@ -64,14 +82,25 @@ def generate(n_jobs: int = 60, hours: float = 12.0, seed: int = 0,
         profile = paper_models.TABLE2[name]
         small = name in paper_models.SMALL
         gpus = int(rng.choice(GPU_SIZES, p=GPU_PROBS))
+        # hetero pools: half the jobs pin a GPU model; plan feasibility
+        # (and hence the initial-plan draw) uses that type's Env
+        gpu_type = ""
+        env_j = env
+        if variant == "hetero" and rng.random() < 0.5:
+            mix = [(t, p) for t, p in HETERO_MIX
+                   if gpu_types is None or t in gpu_types]
+            mix_p = np.array([p for _, p in mix])
+            gpu_type = mix[int(rng.choice(len(mix),
+                                          p=mix_p / mix_p.sum()))][0]
+            env_j = env_for_gpu(gpu_type, env)
         # paper: "In case the original GPU number is infeasible for the
         # model, we use a feasible one" — keep GPU-hours constant.
         allow_tp_pp = not small                     # paper disables TP/PP
-        plans = _feasible_plans(profile, gpus, env, allow_tp_pp)
+        plans = _feasible_plans(profile, gpus, env_j, allow_tp_pp)
         tries = 0
         while not plans and tries < 6:
             gpus = min(gpus * 2, 64)
-            plans = _feasible_plans(profile, gpus, env, allow_tp_pp)
+            plans = _feasible_plans(profile, gpus, env_j, allow_tp_pp)
             tries += 1
         if not plans:
             continue
@@ -84,8 +113,9 @@ def generate(n_jobs: int = 60, hours: float = 12.0, seed: int = 0,
             plan = plans[int(rng.integers(len(plans)))]
         # duration: lognormal hours → target iterations at the oracle rate
         dur = float(rng.lognormal(mean=math.log(1800), sigma=1.1))
-        dur = min(max(dur, 120.0), 6 * 3600.0)
-        thpt = oracle.throughput(profile, plan, Alloc(gpus, 12 * gpus))
+        dur = min(max(dur, 120.0), dur_cap_hours * 3600.0)
+        thpt = oracle.throughput(profile, plan, Alloc(gpus, 12 * gpus),
+                                 env=env_j)
         if thpt <= 0:
             continue
         target_iters = max(10.0, dur * thpt / profile.b)
@@ -97,5 +127,16 @@ def generate(n_jobs: int = 60, hours: float = 12.0, seed: int = 0,
             name=f"job{i:04d}-{name}", profile=profile,
             submit=float(t_arr[i]), target_iters=target_iters,
             req_gpus=gpus, req_cpus=12 * gpus, orig_plan=plan,
-            guaranteed=guaranteed, tenant=tenant))
+            guaranteed=guaranteed, tenant=tenant, gpu_type=gpu_type))
     return jobs
+
+
+def philly(n_jobs: int = 500, hours: float = 24.0, seed: int = 0,
+           variant: str = "hetero", env: Env | None = None,
+           load_scale: float = 1.0,
+           gpu_types: list[str] | None = None) -> list[Job]:
+    """Production-shape trace for 256+ GPU cluster simulations: 500+ jobs,
+    Philly long-tail durations (up to 24 h), hetero GPU mix by default."""
+    return generate(n_jobs=n_jobs, hours=hours, seed=seed, variant=variant,
+                    env=env, load_scale=load_scale, dur_cap_hours=24.0,
+                    gpu_types=gpu_types)

@@ -1,0 +1,141 @@
+"""Regression tests for the scheduler state-accounting bugfixes (ISSUE 2
+satellites): per-node host-memory fit at commit, reconfig-penalty gate
+before shrinking, AntMan preemption rollback, live quota accounting —
+plus heterogeneous placement invariants."""
+
+from repro.core import baselines, paper_models
+from repro.core.cluster import (Cluster, Job, JobState, check_capacity,
+                                hetero_cluster, used_per_node)
+from repro.core.perfmodel import FitParams
+from repro.core.scheduler import RubickScheduler, SchedulerConfig
+from repro.parallel.plan import ExecutionPlan
+
+
+def _job(name, profile, req_gpus, submit=0.0, guaranteed=True, tenant="A",
+         plan=None, gpu_type=""):
+    return Job(name=name, profile=profile, submit=submit,
+               target_iters=1e6, req_gpus=req_gpus,
+               req_cpus=12 * req_gpus,
+               orig_plan=plan or ExecutionPlan(dp=1),
+               guaranteed=guaranteed, tenant=tenant, gpu_type=gpu_type)
+
+
+def _snap(states):
+    return [(dict(s.placement), s.plan, s.alloc, s.status, s.n_reconfig)
+            for s in states]
+
+
+# --- satellite 1: per-node host-memory fit -----------------------------------
+
+def test_host_memory_checked_per_node():
+    """Stacked ZeRO-Offload jobs must not over-allocate a node's host
+    memory: the commit path compares each node's host-byte share against
+    the node's free host memory (pre-fix it wrote the share unchecked and
+    tripped the capacity assert)."""
+    prof = paper_models.profile("llama2-7b")     # offload-only at 1 GPU
+    cluster = Cluster(n_nodes=1, mem_per_node=150e9)
+    jobs = [_job(f"j{i}", prof, 1) for i in range(2)]
+    states = [JobState(job=j, fitted=FitParams()) for j in jobs]
+    sched = RubickScheduler(cfg=SchedulerConfig(reallocate_resources=False))
+    sched.schedule(states, cluster, 0.0)
+    assert check_capacity(cluster, states)
+    used = used_per_node(states)
+    for node in cluster.nodes:
+        assert used.get(node.id, (0, 0, 0.0))[2] <= node.mem + 1e-3
+    # the node can host exactly one ~98 GB offload job in 150 GB
+    assert sum(1 for s in states if s.status == "running") == 1
+    assert sum(1 for s in states if s.status == "queued") == 1
+
+
+# --- satellite 2: reconfig-penalty gate before shrinking ---------------------
+
+def test_reconfig_gate_no_zero_gain_shrink():
+    """When a running job's reconfiguration-penalty gate fails, the walk
+    must not run at all — pre-fix, victims shrunk during the walk stayed
+    shrunk even though the beneficiary's new plan was then rejected."""
+    cluster = Cluster(n_nodes=1)
+    jobs = [_job("a", paper_models.profile("roberta-355m"), 4),
+            _job("b", paper_models.profile("llama2-7b"), 4)]
+    states = [JobState(job=j, fitted=FitParams()) for j in jobs]
+    sched = baselines.make_rubick()
+    sched.schedule(states, cluster, 0.0)
+    assert all(s.status == "running" for s in states)
+    # freshly-started jobs have ~zero run_time, so EVERY reconfiguration
+    # gate fails: the second pass must be a strict no-op
+    before = _snap(states)
+    sched.schedule(states, cluster, 60.0)
+    assert check_capacity(cluster, states)
+    assert _snap(states) == before
+
+
+# --- satellite 3: AntMan preemption rollback ---------------------------------
+
+def test_antman_rolls_back_useless_preemptions():
+    """Preempting every best-effort job and STILL failing to place the
+    guaranteed one must restore the victims (pre-fix they all stayed
+    evicted for zero gain)."""
+    prof = paper_models.profile("roberta-355m")
+    cluster = Cluster(n_nodes=1)
+    be = [_job(f"be{i}", prof, 4, guaranteed=False, tenant="B")
+          for i in range(2)]
+    states = [JobState(job=j, fitted=FitParams()) for j in be]
+    sched = baselines.ALL["antman"]()
+    sched.schedule(states, cluster, 0.0)
+    assert all(s.status == "running" for s in states)
+    before = _snap(states)
+    big = _job("g", prof, 16)        # can never fit in an 8-GPU cluster
+    states.append(JobState(job=big, fitted=FitParams()))
+    sched.schedule(states, cluster, 10.0)
+    assert states[-1].status == "queued"
+    assert _snap(states[:2]) == before
+    assert check_capacity(cluster, states)
+
+
+# --- satellite 4: quota accounts live GPUs -----------------------------------
+
+def test_quota_counts_grown_allocations():
+    """Tenant quotas charge the GPUs running guaranteed jobs actually
+    hold, and growth is capped by the tenant's remaining quota room
+    (pre-fix a 4-GPU request under an 8-GPU quota could grow to hold the
+    whole cluster)."""
+    prof = paper_models.profile("llama2-7b")
+    cluster = Cluster(n_nodes=2)                  # 16 GPUs
+    sched = baselines.make_rubick(quotas={"A": 8})
+    states = [JobState(job=_job("j1", prof, 4), fitted=FitParams())]
+    sched.schedule(states, cluster, 0.0)
+    s1 = states[0]
+    assert s1.status == "running"
+    assert s1.total_gpus <= 8                     # pre-fix: grew to 16
+    # a queued same-tenant job reserves minRes room, the grown job shrinks
+    # back, and admission succeeds with live usage within quota
+    states.append(JobState(job=_job("j2", prof, 4, submit=100.0),
+                           fitted=FitParams()))
+    s1.run_time = 1e6                 # long-running: reconfig gate passes
+    sched.schedule(states, cluster, 100.0)
+    sched.schedule(states, cluster, 200.0)
+    assert check_capacity(cluster, states)
+    assert states[1].status == "running"
+    live = sum(s.total_gpus for s in states
+               if s.status == "running" and s.job.guaranteed)
+    assert live <= 8
+
+
+# --- heterogeneous placement invariants --------------------------------------
+
+def test_hetero_placement_single_type_and_pinning():
+    """Placements never span GPU types, and a job pinning a gpu_type only
+    lands on matching nodes."""
+    cluster = hetero_cluster([("a800", 1), ("v100", 1)])
+    prof = paper_models.profile("roberta-355m")
+    jobs = [_job("any", prof, 4),
+            _job("pin", prof, 4, gpu_type="v100")]
+    states = [JobState(job=j, fitted=FitParams()) for j in jobs]
+    sched = baselines.make_rubick()
+    sched.schedule(states, cluster, 0.0)
+    assert check_capacity(cluster, states)
+    for s in states:
+        models = {cluster.nodes[nid].gpu_model for nid in s.placement}
+        assert len(models) <= 1
+        if s.job.gpu_type and s.status == "running":
+            assert models == {s.job.gpu_type}
+    assert states[1].status == "running"
