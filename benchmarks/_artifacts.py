@@ -1,0 +1,63 @@
+"""Shared benchmark plumbing.
+
+Two things every benchmark needs and none should reimplement:
+
+  * ``write_bench_json(name, rows)`` — machine-readable ``BENCH_<name>.json``
+    artifacts (timings, derived metrics, engine modes) so the perf
+    trajectory is tracked across PRs instead of living in terminal
+    scrollback.  Default output dir is ``benchmarks/out/`` (gitignored);
+    override with ``$BENCH_OUT_DIR``.
+  * ``prewarmed_fit_cache()`` — the Table-2 model fits under the default
+    Env, computed once per process.  ``benchmarks/run.py --jobs N`` warms
+    this in the parent before forking workers, so every worker inherits
+    the fits via copy-on-write instead of refitting per process.  The
+    keys/values match exactly what ``Simulator._fitted`` would compute
+    (same profiling samples, same default oracle/Env), so seeding a
+    simulator's ``fit_cache`` with a copy is result-identical.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+OUT_ENV = "BENCH_OUT_DIR"
+
+
+def out_dir() -> Path:
+    d = Path(os.environ.get(OUT_ENV, "") or Path(__file__).parent / "out")
+    d.mkdir(parents=True, exist_ok=True)
+    return d
+
+
+def write_bench_json(name: str, rows: list[dict],
+                     extra: dict | None = None) -> Path:
+    payload = {"bench": name, "unix_time": time.time(), "rows": rows}
+    if extra:
+        payload.update(extra)
+    path = out_dir() / f"BENCH_{name}.json"
+    path.write_text(json.dumps(payload, indent=2, default=str) + "\n")
+    return path
+
+
+_FIT_CACHE: dict = {}
+
+
+def prewarmed_fit_cache() -> dict:
+    """Fits for every Table-2 model, keyed like ``Simulator._fitted``
+    (``"<name>@b<batch>"``).  Callers should take a copy (``dict(...)``)
+    when handing it to a Simulator so later mutations stay local."""
+    if not _FIT_CACHE:
+        from repro.core import paper_models
+        from repro.core.oracle import AnalyticOracle, profiling_samples
+        from repro.core.perfmodel import Env, FitParams, fit
+        oracle = AnalyticOracle()
+        env = Env()
+        for prof in paper_models.TABLE2.values():
+            samples = profiling_samples(prof, oracle)
+            key = f"{prof.name}@b{prof.b}"
+            _FIT_CACHE[key] = fit(prof, samples, env) \
+                if len(samples) >= 4 else FitParams()
+    return _FIT_CACHE

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import time
 
+from benchmarks import _artifacts
 from repro.core import sensitivity, trace
 from repro.core.cluster import Cluster, JobState, check_capacity
 from repro.core.perfmodel import FitParams
@@ -77,6 +78,7 @@ def run() -> list[dict]:
                 "pass_10x": bool(speedup >= 10.0) if gpus == 64 else None,
             },
         })
+    _artifacts.write_bench_json("sched_overhead", rows)
     return rows
 
 

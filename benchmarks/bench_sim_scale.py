@@ -19,6 +19,7 @@ from __future__ import annotations
 import sys
 import time
 
+from benchmarks import _artifacts
 from repro.core import baselines, trace
 from repro.core.cluster import Cluster, JobState, hetero_cluster
 from repro.core.simulator import Simulator
@@ -103,11 +104,14 @@ def scale_row(cache, smoke=False) -> dict:
 
 
 def run(smoke: bool = False) -> list[dict]:
-    cache: dict = {}
+    cache = dict(_artifacts.prewarmed_fit_cache())
     if smoke:
-        return parity_rows(cache, n_jobs=10, n_nodes=2) + \
+        rows = parity_rows(cache, n_jobs=10, n_nodes=2) + \
             [scale_row(cache, smoke=True)]
-    return parity_rows(cache) + [scale_row(cache)]
+    else:
+        rows = parity_rows(cache) + [scale_row(cache)]
+    _artifacts.write_bench_json("sim_scale", rows, extra={"smoke": smoke})
+    return rows
 
 
 if __name__ == "__main__":

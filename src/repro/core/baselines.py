@@ -14,39 +14,56 @@
 
 All share the Rubick scheduler machinery with switches off, plus small
 policy overrides, so comparisons isolate the reconfigurability dimensions.
+
+The gang placers (FIFO / Synergy / AntMan) run on the same incremental
+machinery as Rubick where it applies: one pass-wide per-node usage map
+folded in place on commit (instead of a rebuild per queued job), a
+free-capacity skip over full nodes (gangs never shrink, so a node without
+free GPUs can contribute nothing), and a failed-gang signature memo that
+persists across passes under ``pass_engine="incremental"`` until cluster
+state changes (a placement, an eviction, or a completion event).
 """
 
 from __future__ import annotations
 
+import weakref
+
 from repro.core import memory
-from repro.core.cluster import Cluster, JobState, used_per_node
+from repro.core.cluster import (Cluster, JobState, SchedEvents,
+                                used_per_node)
 from repro.core.perfmodel import Alloc
 from repro.core.scheduler import RubickScheduler, SchedulerConfig
 
 
-def make_rubick(env=None, quotas=None) -> RubickScheduler:
-    s = RubickScheduler(env, SchedulerConfig(), quotas)
+def _cfg(pass_engine: str | None = None, **kw) -> SchedulerConfig:
+    if pass_engine is not None:
+        kw["pass_engine"] = pass_engine
+    return SchedulerConfig(**kw)
+
+
+def make_rubick(env=None, quotas=None, pass_engine=None) -> RubickScheduler:
+    s = RubickScheduler(env, _cfg(pass_engine), quotas)
     s.name = "rubick"
     return s
 
 
-def make_rubick_e(env=None, quotas=None) -> RubickScheduler:
-    s = RubickScheduler(env, SchedulerConfig(reallocate_resources=False),
+def make_rubick_e(env=None, quotas=None, pass_engine=None) -> RubickScheduler:
+    s = RubickScheduler(env, _cfg(pass_engine, reallocate_resources=False),
                         quotas)
     s.name = "rubick-e"
     return s
 
 
-def make_rubick_r(env=None, quotas=None) -> RubickScheduler:
-    s = RubickScheduler(env, SchedulerConfig(reconfigure_plans=False),
+def make_rubick_r(env=None, quotas=None, pass_engine=None) -> RubickScheduler:
+    s = RubickScheduler(env, _cfg(pass_engine, reconfigure_plans=False),
                         quotas)
     s.name = "rubick-r"
     return s
 
 
-def make_rubick_n(env=None, quotas=None) -> RubickScheduler:
-    s = RubickScheduler(env, SchedulerConfig(reconfigure_plans=False,
-                                             reallocate_resources=False),
+def make_rubick_n(env=None, quotas=None, pass_engine=None) -> RubickScheduler:
+    s = RubickScheduler(env, _cfg(pass_engine, reconfigure_plans=False,
+                                  reallocate_resources=False),
                         quotas)
     s.name = "rubick-n"
     return s
@@ -56,25 +73,72 @@ class _FixedPlanScheduler(RubickScheduler):
     """FIFO gang scheduler: requested resources, original plan, no changes."""
     name = "fifo"
 
-    def __init__(self, env=None, quotas=None):
-        super().__init__(env, SchedulerConfig(reconfigure_plans=False,
-                                              reallocate_resources=False),
+    def __init__(self, env=None, quotas=None, pass_engine=None):
+        super().__init__(env, _cfg(pass_engine, reconfigure_plans=False,
+                                   reallocate_resources=False),
                          quotas)
+        self._gang_failed: set[tuple] = set()
+        self._gang_cluster: weakref.ref | None = None
 
-    def schedule(self, jobs, cluster, now=0.0):
+    # -- incremental machinery -----------------------------------------
+    def _gang_memo(self, cluster: Cluster,
+                   events: SchedEvents | None) -> set:
+        """Cross-pass failed-gang memo: a gang placement is a pure
+        function of cluster state and the job's (model, fitted, request,
+        gpu_type, plan) signature, so a failed signature stays failed
+        until capacity is freed (completion) or some placement/eviction
+        changes state (the pass clears the memo then)."""
+        prev = self._gang_cluster() if self._gang_cluster is not None \
+            else None
+        if self.cfg.pass_engine != "incremental" or events is None \
+                or prev is not cluster:
+            self._gang_failed = set()
+            self._gang_cluster = weakref.ref(cluster)
+        elif events.completed:
+            self._gang_failed.clear()
+        return self._gang_failed
+
+    @staticmethod
+    def _gang_sig(js: JobState) -> tuple:
+        return (id(js.job.profile), id(js.fitted), js.job.req_gpus,
+                js.job.gpu_type, js.job.orig_plan)
+
+    @staticmethod
+    def _fold(placement: dict, used: dict, sign: int = 1) -> None:
+        for nid, (g, c, m) in placement.items():
+            ug, uc, um = used.get(nid, (0, 0, 0.0))
+            used[nid] = (ug + sign * g, uc + sign * c, um + sign * m)
+
+    # ------------------------------------------------------------------
+    def schedule(self, jobs, cluster, now=0.0, events=None):
+        self._scope_memos(cluster)
         active = [j for j in jobs if j.status != "done"]
         for js in active:
             self._ensure_min_res(js, cluster)
+        used = used_per_node([j for j in active if j.status == "running"])
+        failed = self._gang_memo(cluster, events)
         queued = sorted([j for j in active if j.status == "queued"],
                         key=lambda j: j.job.submit)
         for js in queued:
             if not self._quota_ok(js, jobs):
                 continue
-            self._gang_place(js, active, cluster, now)
+            sig = self._gang_sig(js)
+            if sig in failed:
+                continue
+            if self._gang_place(js, active, cluster, now, used):
+                self._fold(js.placement, used)
+                failed.clear()
+            else:
+                failed.add(sig)
 
-    def _gang_place(self, js: JobState, active, cluster, now) -> bool:
+    def _gang_place(self, js: JobState, active, cluster, now,
+                    used=None) -> bool:
+        """``used`` is the pass-wide per-node usage of every placed job
+        EXCLUDING ``js``; the caller folds the new placement in on
+        success (so one map serves the whole pass)."""
         need = js.job.req_gpus
-        used = used_per_node([j for j in active if j is not js])
+        if used is None:
+            used = used_per_node([j for j in active if j is not js])
         # one GPU-type group at a time (gangs never span GPU models);
         # homogeneous clusters see a single anonymous group, i.e. the
         # classic full-cluster walk
@@ -83,6 +147,8 @@ class _FixedPlanScheduler(RubickScheduler):
             got = 0
             for node in nodes:
                 fg, fc, fm = node.free(used)
+                if fg <= 0:            # free-capacity skip: gangs never shrink
+                    continue
                 take = min(fg, need - got)
                 if take > 0:
                     placement[node.id] = (take, min(fc, self.cfg.cpus_per_gpu
@@ -123,15 +189,18 @@ class SynergyLike(_FixedPlanScheduler):
     """Fixed GPUs (as requested) + sensitivity-aware CPU allocation [33]."""
     name = "synergy"
 
-    def _gang_place(self, js, active, cluster, now):
-        ok = super()._gang_place(js, active, cluster, now)
+    def _gang_place(self, js, active, cluster, now, used=None):
+        if used is None:
+            used = used_per_node([j for j in active if j is not js])
+        ok = super()._gang_place(js, active, cluster, now, used)
         if not ok:
             return False
         # CPU-sensitivity tuning: offload-style jobs get extra CPUs
+        # (``used`` still excludes js — the caller folds the tuned
+        # placement afterwards)
         curve = self.curve(js, cluster, self._placed_env(js, cluster))
         g = js.total_gpus
         if curve.slope_cpu(g, js.total_cpus) > 0:
-            used = used_per_node([j for j in active if j is not js])
             for nid in list(js.placement):
                 node = cluster.nodes[nid]
                 fg, fc, fm = node.free(used)
@@ -148,8 +217,8 @@ class SiaLike(RubickScheduler):
     """DP-dimension GPU elasticity only (no plan switching) [18]."""
     name = "sia"
 
-    def __init__(self, env=None, quotas=None):
-        super().__init__(env, SchedulerConfig(reconfigure_plans=False),
+    def __init__(self, env=None, quotas=None, pass_engine=None):
+        super().__init__(env, _cfg(pass_engine, reconfigure_plans=False),
                          quotas)
 
 
@@ -158,48 +227,70 @@ class AntManLike(_FixedPlanScheduler):
     opportunistically and are preempted on guaranteed arrivals [56]."""
     name = "antman"
 
-    def schedule(self, jobs, cluster, now=0.0):
+    def schedule(self, jobs, cluster, now=0.0, events=None):
+        self._scope_memos(cluster)
         active = [j for j in jobs if j.status != "done"]
         for js in active:
             self._ensure_min_res(js, cluster)
+        used = used_per_node([j for j in active if j.status == "running"])
+        failed = self._gang_memo(cluster, events)
         queued_g = sorted([j for j in active if j.status == "queued"
                            and j.job.guaranteed], key=lambda j: j.job.submit)
         for js in queued_g:
             if not self._quota_ok(js, jobs):
                 continue
-            if not self._gang_place(js, active, cluster, now):
-                # preempt best-effort jobs to honor the resource guarantee
-                be = [j for j in active if j.status == "running"
-                      and not j.job.guaranteed]
-                preempted: list[tuple] = []
-                placed = False
-                for victim in be:
-                    preempted.append((victim, dict(victim.placement),
-                                      victim.plan, victim.alloc,
-                                      victim.n_reconfig))
-                    victim.status = "queued"
-                    victim.placement = {}
-                    victim.plan = None
-                    victim.alloc = None
-                    victim.n_reconfig += 1
-                    if self._gang_place(js, active, cluster, now):
-                        placed = True
-                        break
-                if not placed:
-                    # bugfix: evicting every best-effort job and STILL not
-                    # placing the guaranteed one left all victims evicted
-                    # for zero gain — roll the useless preemptions back
-                    for victim, placement, plan, alloc, n_rcfg in preempted:
-                        victim.status = "running"
-                        victim.placement = placement
-                        victim.plan = plan
-                        victim.alloc = alloc
-                        victim.n_reconfig = n_rcfg
+            sig = self._gang_sig(js)
+            if sig in failed:
+                continue
+            if self._gang_place(js, active, cluster, now, used):
+                self._fold(js.placement, used)
+                failed.clear()
+                continue
+            # preempt best-effort jobs to honor the resource guarantee
+            be = [j for j in active if j.status == "running"
+                  and not j.job.guaranteed]
+            preempted: list[tuple] = []
+            placed = False
+            for victim in be:
+                preempted.append((victim, dict(victim.placement),
+                                  victim.plan, victim.alloc,
+                                  victim.n_reconfig))
+                self._fold(victim.placement, used, sign=-1)
+                victim.status = "queued"
+                victim.placement = {}
+                victim.plan = None
+                victim.alloc = None
+                victim.n_reconfig += 1
+                if self._gang_place(js, active, cluster, now, used):
+                    placed = True
+                    break
+            if placed:
+                self._fold(js.placement, used)
+                failed.clear()
+            else:
+                # bugfix: evicting every best-effort job and STILL not
+                # placing the guaranteed one left all victims evicted
+                # for zero gain — roll the useless preemptions back
+                for victim, placement, plan, alloc, n_rcfg in preempted:
+                    victim.status = "running"
+                    victim.placement = placement
+                    victim.plan = plan
+                    victim.alloc = alloc
+                    victim.n_reconfig = n_rcfg
+                    self._fold(placement, used)
+                failed.add(sig)
         queued_be = sorted([j for j in active if j.status == "queued"
                             and not j.job.guaranteed],
                            key=lambda j: j.job.submit)
         for js in queued_be:
-            self._gang_place(js, active, cluster, now)
+            sig = self._gang_sig(js)
+            if sig in failed:
+                continue
+            if self._gang_place(js, active, cluster, now, used):
+                self._fold(js.placement, used)
+                failed.clear()
+            else:
+                failed.add(sig)
 
 
 ALL = {
@@ -207,7 +298,10 @@ ALL = {
     "rubick-e": make_rubick_e,
     "rubick-r": make_rubick_r,
     "rubick-n": make_rubick_n,
-    "sia": lambda env=None, quotas=None: SiaLike(env, quotas),
-    "synergy": lambda env=None, quotas=None: SynergyLike(env, quotas),
-    "antman": lambda env=None, quotas=None: AntManLike(env, quotas),
+    "sia": lambda env=None, quotas=None, pass_engine=None:
+        SiaLike(env, quotas, pass_engine),
+    "synergy": lambda env=None, quotas=None, pass_engine=None:
+        SynergyLike(env, quotas, pass_engine),
+    "antman": lambda env=None, quotas=None, pass_engine=None:
+        AntManLike(env, quotas, pass_engine),
 }

@@ -115,6 +115,20 @@ Placement = dict[int, tuple[int, int, float]]
 
 
 @dataclass
+class SchedEvents:
+    """What changed since the scheduler's previous pass.
+
+    The event-driven simulator hands the scheduler an event-scoped dirty
+    set — which jobs arrived and which completed (with the placement they
+    freed, captured before the engine clears it) — so an incremental pass
+    engine can update its persistent indices instead of rebuilding them
+    from every active job.  ``None`` (or simply not passing events) means
+    "unknown delta": incremental engines must rebuild from scratch."""
+    arrived: "list[JobState]" = field(default_factory=list)
+    completed: "list[tuple[JobState, Placement]]" = field(default_factory=list)
+
+
+@dataclass
 class JobState:
     job: Job
     status: str = "queued"               # queued | running | done

@@ -75,6 +75,8 @@ class SensitivityCurve:
         self._static_evals: dict[tuple, np.ndarray] = {}
         self._grow_memo: dict[tuple[int, int], int] = {}
         self._slopes: list[float] | None = None
+        self._baselines: dict[tuple, float] = {}
+        self._minres: dict[tuple, tuple[int, int]] = {}
 
     # ------------------------------------------------------------------
     # batched evaluation primitives
@@ -434,6 +436,34 @@ class SensitivityCurve:
             return 0.0
         return max(0.0, self.best_plan(gpus, cpus + delta).throughput
                    - self.best_plan(gpus, cpus).throughput) / delta
+
+    def baseline_throughput(self, plan: ExecutionPlan, gpus: int,
+                            cpus: int) -> float:
+        """Predicted throughput of one fixed (plan, alloc) point — the
+        guarantee baseline of a job submitted with that request.  Memoized
+        on the curve: every job of the same model type + request shape
+        shares one evaluation per process instead of paying a scalar
+        ``predict_throughput`` each (curves are immutable, so the value
+        can never go stale)."""
+        key = (plan, gpus, cpus)
+        v = self._baselines.get(key)
+        if v is None:
+            v = self._baselines[key] = predict_throughput(
+                self.profile, plan, Alloc(gpus, cpus), self.env,
+                self.fitted)
+        return v
+
+    def min_res_for(self, req_gpus: int, req_cpus: int,
+                    baseline: float) -> tuple[int, int]:
+        """Memoized ``min_resources`` — minRes is a pure function of the
+        curve and the (request, baseline) pair, so the scheduler pays it
+        once per (profile, fitted, env, request), not once per job."""
+        key = (req_gpus, req_cpus, baseline)
+        v = self._minres.get(key)
+        if v is None:
+            v = self._minres[key] = min_resources(self, req_gpus, req_cpus,
+                                                  baseline)
+        return v
 
     def grow_target(self, gpus: int, hi: int) -> int:
         """Largest g ∈ [gpus, hi] still worth growing to: advance while the

@@ -14,7 +14,10 @@ Two engines share the same semantics:
     job's (plan, alloc, placement) changes, since the oracle is a pure
     function of those.  Completion events are invalidated by a per-job
     epoch counter whenever the job's assignment (and hence its finish
-    estimate) changes.
+    estimate) changes.  Each pass hands the scheduler the event-scoped
+    dirty set (``cluster.SchedEvents``: arrivals + completions with the
+    placement they freed) so an incremental pass engine can update its
+    persistent indices instead of rebuilding them from every job.
   * ``mode="discrete"`` is the original fixed-step reference loop
     (``dt = max(dt, 1.0)``), kept for parity pinning — the event engine
     must reproduce its JCT/makespan within 1% on seed traces.
@@ -40,7 +43,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.cluster import Cluster, Job, JobState, check_capacity
+from repro.core.cluster import (Cluster, Job, JobState, SchedEvents,
+                                check_capacity)
 from repro.core.oracle import AnalyticOracle, profiling_samples
 from repro.core.perfmodel import Env, FitParams, fit
 from repro.core.sensitivity import get_curve
@@ -226,9 +230,14 @@ class Simulator:
             n_events += len(batch)
             state_changed = False
             resumed: list[JobState] = []
+            # event-scoped dirty sets: the incremental scheduler engine
+            # updates its persistent indices from exactly what changed
+            ev_arrived: list[JobState] = []
+            ev_completed: list[tuple] = []
             for _, kind, _, payload in batch:
                 if kind == EV_ARRIVAL:
                     active.append(payload)
+                    ev_arrived.append(payload)
                     state_changed = True
                 elif kind == EV_COMPLETION:
                     s, e = payload
@@ -237,6 +246,7 @@ class Simulator:
                     s.progress = max(s.progress, s.job.target_iters)
                     s.status = "done"
                     s.finish_time = t
+                    ev_completed.append((s, dict(s.placement)))
                     s.placement = {}
                     active.remove(s)
                     done.append(s)
@@ -250,7 +260,13 @@ class Simulator:
             if state_changed:
                 prev = {id(s): (s.plan, s.alloc, s.status, s.placement)
                         for s in active}
-                self.scheduler.schedule(active, self.cluster, t)
+                if getattr(self.scheduler, "accepts_events", False):
+                    self.scheduler.schedule(
+                        active, self.cluster, t,
+                        events=SchedEvents(arrived=ev_arrived,
+                                           completed=ev_completed))
+                else:
+                    self.scheduler.schedule(active, self.cluster, t)
                 n_sched += 1
                 assert check_capacity(self.cluster, active), \
                     "over-allocation"

@@ -1,0 +1,276 @@
+"""Incremental ≡ full-pass scheduler parity (ISSUE 3 tentpole).
+
+The incremental engine must reproduce the full-pass engine's decisions
+EXACTLY — identical per-job JCTs, event counts, reconfiguration counts
+and guarantee-violation counts — across randomized traces covering
+heterogeneous clusters, tenant quotas, starvation promotion and
+failed-walk rollback.  Plus regression tests for the event-scoped
+dirty-set path, the memo-leak fix, and rollback side-effect freedom.
+"""
+
+import gc
+import weakref
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import baselines, paper_models, trace
+from repro.core.cluster import (Cluster, Job, JobState, SchedEvents,
+                                check_capacity, hetero_cluster)
+from repro.core.perfmodel import FitParams
+from repro.core.scheduler import RubickScheduler, SchedulerConfig
+from repro.parallel.plan import ExecutionPlan
+
+FIT_CACHE: dict = {}
+HET_SPEC = [("a800", 3), ("h800", 1), ("a100-40g", 2), ("v100", 2)]
+
+
+def _sim(sched_name, cluster, jobs, quotas=None, engine="full"):
+    from repro.core.simulator import Simulator
+    sched = baselines.ALL[sched_name](quotas=quotas, pass_engine=engine)
+    return Simulator(cluster, sched, fit_cache=FIT_CACHE).run(jobs)
+
+
+def _assert_exact(full, inc):
+    assert full.jcts == inc.jcts
+    assert full.makespan == inc.makespan
+    assert full.n_reconfig == inc.n_reconfig
+    assert full.n_events == inc.n_events
+    assert full.guarantee_violations == inc.guarantee_violations
+
+
+# --- acceptance: exact decision parity on seed / hetero / quota traces -------
+
+@pytest.mark.parametrize("variant,quotas", [
+    ("base", None),
+    ("hetero", None),
+    ("mt", {"A": 24}),
+])
+def test_incremental_matches_full_exactly(variant, quotas):
+    gpu_types = [t for t, _ in HET_SPEC] if variant == "hetero" else None
+    jobs = trace.philly(n_jobs=60, hours=8, seed=2, load_scale=3.0,
+                        variant=variant, gpu_types=gpu_types)
+    mk = (lambda: hetero_cluster(HET_SPEC)) if variant == "hetero" \
+        else (lambda: Cluster(n_nodes=8))
+    full = _sim("rubick", mk(), jobs, quotas, "full")
+    inc = _sim("rubick", mk(), jobs, quotas, "incremental")
+    _assert_exact(full, inc)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 500), n_jobs=st.integers(20, 60),
+       load=st.sampled_from([2.0, 3.0, 4.0]),
+       sched_name=st.sampled_from(["rubick", "sia", "synergy", "antman"]),
+       variant=st.sampled_from(["base", "mt", "hetero"]))
+def test_parity_property_random_traces(seed, n_jobs, load, sched_name,
+                                       variant):
+    """Property: on any random trace (hetero / quotas / contention — deep
+    queues exercise starvation promotion and failed-walk rollback), both
+    pass engines make identical decisions."""
+    quotas = {"A": 24} if variant == "mt" else None
+    gpu_types = [t for t, _ in HET_SPEC] if variant == "hetero" else None
+    jobs = trace.philly(n_jobs=n_jobs, hours=6, seed=seed, load_scale=load,
+                        variant=variant, gpu_types=gpu_types)
+    mk = (lambda: hetero_cluster(HET_SPEC)) if variant == "hetero" \
+        else (lambda: Cluster(n_nodes=6))
+    full = _sim(sched_name, mk(), jobs, quotas, "full")
+    inc = _sim(sched_name, mk(), jobs, quotas, "incremental")
+    _assert_exact(full, inc)
+
+
+# --- per-event assignment parity (direct lockstep, not just end metrics) -----
+
+def test_lockstep_assignments_identical():
+    """Drive two worlds pass-by-pass through the event simulator and
+    compare every job's (status, plan, alloc, placement, n_reconfig)
+    after every scheduler pass."""
+    from repro.core.simulator import Simulator
+
+    jobs = trace.philly(n_jobs=50, hours=6, seed=7, load_scale=3.0,
+                        variant="mt")
+
+    class Lockstep:
+        accepts_events = True
+
+        def __init__(self, full, inc, cluster_inc):
+            self.full, self.inc, self.cl = full, inc, cluster_inc
+            self.mirror = {}
+            self.passes = 0
+
+        def _m(self, s):
+            m = self.mirror.get(id(s))
+            if m is None:
+                m = self.mirror[id(s)] = JobState(job=s.job,
+                                                  fitted=s.fitted)
+            return m
+
+        def schedule(self, jobs_, cluster, now=0.0, events=None):
+            self.passes += 1
+            mjobs = [self._m(s) for s in jobs_]
+            for s, m in zip(jobs_, mjobs):
+                m.progress, m.run_time = s.progress, s.run_time
+            mev = None
+            if events is not None:
+                mev = SchedEvents(
+                    arrived=[self._m(s) for s in events.arrived],
+                    completed=[(self._m(s), dict(p))
+                               for s, p in events.completed])
+                for m, _ in mev.completed:
+                    m.status = "done"
+                    m.placement = {}
+            self.full.schedule(jobs_, cluster, now, events=events)
+            self.inc.schedule(mjobs, self.cl, now, events=mev)
+            for s, m in zip(jobs_, mjobs):
+                assert (s.status, s.plan, s.alloc, s.placement,
+                        s.n_reconfig) == \
+                    (m.status, m.plan, m.alloc, m.placement,
+                     m.n_reconfig), \
+                    f"pass {self.passes}: {s.job.name} diverged"
+
+        def __getattr__(self, attr):
+            return getattr(self.full, attr)
+
+    ls = Lockstep(
+        baselines.make_rubick(quotas={"A": 24}, pass_engine="full"),
+        baselines.make_rubick(quotas={"A": 24}, pass_engine="incremental"),
+        Cluster(n_nodes=6))
+    Simulator(Cluster(n_nodes=6), ls, fit_cache=FIT_CACHE).run(jobs)
+    assert ls.passes > 10
+
+
+# --- dirty-set path: persistent indices across explicit events ---------------
+
+def _job(name, profile, req_gpus, submit=0.0, guaranteed=True, tenant="A"):
+    return Job(name=name, profile=profile, submit=submit,
+               target_iters=1e6, req_gpus=req_gpus,
+               req_cpus=12 * req_gpus, orig_plan=ExecutionPlan(dp=1),
+               guaranteed=guaranteed, tenant=tenant)
+
+
+def test_event_path_completion_frees_capacity():
+    """With explicit SchedEvents, the persistent indices must release a
+    completed job's capacity and admit the queued one."""
+    prof = paper_models.profile("roberta-355m")
+    cluster = Cluster(n_nodes=1)
+    # minRes == request (no plan reconfiguration): the resident job can
+    # never be shrunk, so the second arrival must wait for completion
+    sched = RubickScheduler(cfg=SchedulerConfig(
+        pass_engine="incremental", reconfigure_plans=False))
+    a = JobState(job=_job("a", prof, 8), fitted=FitParams())
+    states = [a]
+    sched.schedule(states, cluster, 0.0, events=SchedEvents(arrived=[a]))
+    assert a.status == "running"
+    b = JobState(job=_job("b", prof, 8, submit=10.0), fitted=FitParams())
+    states.append(b)
+    sched.schedule(states, cluster, 10.0, events=SchedEvents(arrived=[b]))
+    assert b.status == "queued"          # cluster full, walk fails+parks
+    # again with no events at all: the parked signature must keep holding
+    sched.schedule(states, cluster, 20.0, events=SchedEvents())
+    assert b.status == "queued"
+    # a completes: its freed placement arrives as a dirty set
+    freed = dict(a.placement)
+    a.status = "done"
+    a.placement = {}
+    states.remove(a)
+    sched.schedule(states, cluster, 30.0,
+                   events=SchedEvents(completed=[(a, freed)]))
+    assert b.status == "running"
+    assert check_capacity(cluster, states)
+
+
+def test_failed_walk_is_side_effect_free_incremental():
+    """A failed walk must leave victims untouched — including the
+    placement dict OBJECT (external snapshots alias it; a mutated-then-
+    replaced dict used to look like a phantom migration)."""
+    cluster = Cluster(n_nodes=1)
+    prof_small = paper_models.profile("roberta-355m")
+    prof_big = paper_models.profile("llama-30b")
+    a = JobState(job=_job("a", prof_small, 4, guaranteed=False,
+                          tenant="B"), fitted=FitParams())
+    b = JobState(job=_job("b", prof_big, 4), fitted=FitParams())
+    states = [a, b]
+    # minRes == request: a 16-GPU arrival can never fit in 8 GPUs, but
+    # its walk still shrinks the best-effort resident before giving up
+    sched = RubickScheduler(cfg=SchedulerConfig(
+        pass_engine="incremental", reconfigure_plans=False))
+    sched.schedule(states, cluster, 0.0,
+                   events=SchedEvents(arrived=[a, b]))
+    placements = {id(s): (s.placement, dict(s.placement)) for s in states
+                  if s.status == "running"}
+    # an unsatisfiable arrival triggers walks that shrink + roll back
+    big = JobState(job=_job("big", prof_big, 16), fitted=FitParams())
+    states.append(big)
+    sched.schedule(states, cluster, 60.0,
+                   events=SchedEvents(arrived=[big]))
+    assert big.status == "queued"
+    for s in states[:2]:
+        if id(s) in placements:
+            obj, content = placements[id(s)]
+            assert s.placement is obj          # same object
+            assert s.placement == content      # same content
+    assert check_capacity(cluster, states)
+
+
+# --- satellite: memo-leak fix ------------------------------------------------
+
+def test_scheduler_memos_scoped_to_cluster():
+    """Scheduler memos must not pin dead Cluster objects nor grow across
+    a sweep of simulations (pre-fix, _order_memo held every cluster ever
+    scheduled and _curve_memo grew per (profile, env, size) forever)."""
+    prof = paper_models.profile("roberta-355m")
+    sched = baselines.make_rubick()
+    refs = []
+    for _ in range(4):
+        spec = [("a800", 1), ("v100", 1)]
+        cluster = hetero_cluster(spec)
+        states = [JobState(job=_job("j", prof, 2), fitted=FitParams())]
+        sched.schedule(states, cluster, 0.0)
+        assert states[0].status == "running"
+        refs.append(weakref.ref(cluster))
+        sizes = (len(sched._order_memo), len(sched._curve_memo))
+        del cluster, states
+    # only the last cluster's entries survive a sweep
+    assert sizes == (len(sched._order_memo), len(sched._curve_memo))
+    gc.collect()
+    # every previous cluster was released (nothing pins them)
+    assert all(r() is None for r in refs[:-1])
+
+
+def test_reset_indices_clears_state():
+    prof = paper_models.profile("roberta-355m")
+    cluster = Cluster(n_nodes=1)
+    sched = baselines.make_rubick()
+    states = [JobState(job=_job("j", prof, 2), fitted=FitParams())]
+    sched.schedule(states, cluster, 0.0)
+    assert sched._ctx is not None
+    sched.reset_indices()
+    assert sched._ctx is None and not sched._curve_memo
+
+
+# --- starvation promotion parity (direct, deterministic) ---------------------
+
+def test_starvation_promotion_parity():
+    """Long-queued best-effort jobs jump the slope order in BOTH engines
+    at the same pass."""
+    prof = paper_models.profile("roberta-355m")
+
+    def world(engine):
+        cluster = Cluster(n_nodes=1)
+        sched = RubickScheduler(
+            cfg=SchedulerConfig(pass_engine=engine))
+        g = JobState(job=_job("g", prof, 8), fitted=FitParams())
+        be = JobState(job=_job("be", prof, 4, submit=1.0,
+                               guaranteed=False, tenant="B"),
+                      fitted=FitParams())
+        states = [g, be]
+        sched.schedule(states, cluster, 1.0)
+        snap = []
+        for now in (600.0, 1900.0, 3600.0):
+            g.run_time = now            # keep the reconfig gate open
+            sched.schedule(states, cluster, now)
+            snap.append([(s.status, s.total_gpus, dict(s.placement))
+                         for s in states])
+        return snap
+
+    assert world("full") == world("incremental")
