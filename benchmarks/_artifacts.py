@@ -47,17 +47,19 @@ _FIT_CACHE: dict = {}
 
 def prewarmed_fit_cache() -> dict:
     """Fits for every Table-2 model, keyed like ``Simulator._fitted``
-    (``"<name>@b<batch>"``).  Callers should take a copy (``dict(...)``)
-    when handing it to a Simulator so later mutations stay local."""
+    (``perfmodel.fit_key(profile)`` — the FULL profile identity, so
+    profiles sharing a name and batch but differing in shape never share
+    fitted params).  Callers should take a copy (``dict(...)``) when
+    handing it to a Simulator so later mutations (e.g. online-calibration
+    refits) stay local."""
     if not _FIT_CACHE:
         from repro.core import paper_models
         from repro.core.oracle import AnalyticOracle, profiling_samples
-        from repro.core.perfmodel import Env, FitParams, fit
+        from repro.core.perfmodel import Env, FitParams, fit, fit_key
         oracle = AnalyticOracle()
         env = Env()
         for prof in paper_models.TABLE2.values():
             samples = profiling_samples(prof, oracle)
-            key = f"{prof.name}@b{prof.b}"
-            _FIT_CACHE[key] = fit(prof, samples, env) \
+            _FIT_CACHE[fit_key(prof)] = fit(prof, samples, env) \
                 if len(samples) >= 4 else FitParams()
     return _FIT_CACHE

@@ -32,6 +32,7 @@ BENCHES = [
     "bench_sched_overhead",
     "bench_sim_scale",
     "bench_sched_scale",
+    "bench_calibration",
     "bench_roofline",
 ]
 

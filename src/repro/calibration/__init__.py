@@ -1,0 +1,36 @@
+"""Online calibration subsystem (paper Sec 4.3's "refit online" loop).
+
+The paper's performance model is not fit once: whenever prediction error
+on a RUNNING job exceeds a threshold, the model is refit from runtime
+telemetry so scheduling decisions track the real cluster instead of a
+stale 7-point profile.  This package closes that loop for the repro:
+
+  * ``ObservationStore`` — sliding windows of (plan, alloc, env,
+    measured T_iter, predicted T_iter) telemetry per model type, emitted
+    by the simulator at completion events, reschedule points, and the
+    periodic telemetry event.
+  * ``DriftDetector`` — RMSLE of predicted vs observed T_iter over the
+    window; exceeding the threshold (subject to a cooldown) triggers a
+    refit.  Jobs whose initial fit fell back to default ``FitParams``
+    (too few feasible profiling samples) are highest-priority: they
+    refit as soon as enough observations exist, threshold or not.
+  * ``CalibrationManager`` — owns versioned ``FitParams`` per model
+    type, performs warm-started refits (``fit(..., x0=current)``), and
+    publishes each ``Refit`` so consumers can invalidate every derived
+    structure (CurveCache entries, scheduler memos, incremental-pass
+    indices) — see ``SchedEvents.refit`` and ``_PassCtx.apply_refits``.
+"""
+
+from repro.calibration.drift import DriftConfig, DriftDetector, window_rmsle
+from repro.calibration.manager import CalibrationManager, Refit
+from repro.calibration.store import Observation, ObservationStore
+
+__all__ = [
+    "CalibrationManager",
+    "DriftConfig",
+    "DriftDetector",
+    "Observation",
+    "ObservationStore",
+    "Refit",
+    "window_rmsle",
+]

@@ -96,6 +96,13 @@ class _FixedPlanScheduler(RubickScheduler):
             self._gang_cluster = weakref.ref(cluster)
         elif events.completed:
             self._gang_failed.clear()
+        elif events.refit:
+            # gang signatures embed id(fitted): refit jobs re-key (and
+            # re-walk) automatically, but the retired ids must not linger
+            # in the memo where a recycled address could alias them
+            stale = {id(old) for _, old in events.refit}
+            self._gang_failed = {s for s in self._gang_failed
+                                 if s[1] not in stale}
         return self._gang_failed
 
     @staticmethod
@@ -112,6 +119,8 @@ class _FixedPlanScheduler(RubickScheduler):
     # ------------------------------------------------------------------
     def schedule(self, jobs, cluster, now=0.0, events=None):
         self._scope_memos(cluster)
+        if events is not None and events.refit:
+            self._purge_refit_memos(events.refit)
         active = [j for j in jobs if j.status != "done"]
         for js in active:
             self._ensure_min_res(js, cluster)
@@ -229,6 +238,8 @@ class AntManLike(_FixedPlanScheduler):
 
     def schedule(self, jobs, cluster, now=0.0, events=None):
         self._scope_memos(cluster)
+        if events is not None and events.refit:
+            self._purge_refit_memos(events.refit)
         active = [j for j in jobs if j.status != "done"]
         for js in active:
             self._ensure_min_res(js, cluster)

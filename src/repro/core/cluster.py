@@ -119,13 +119,18 @@ class SchedEvents:
     """What changed since the scheduler's previous pass.
 
     The event-driven simulator hands the scheduler an event-scoped dirty
-    set — which jobs arrived and which completed (with the placement they
-    freed, captured before the engine clears it) — so an incremental pass
-    engine can update its persistent indices instead of rebuilding them
-    from every active job.  ``None`` (or simply not passing events) means
-    "unknown delta": incremental engines must rebuild from scratch."""
+    set — which jobs arrived, which completed (with the placement they
+    freed, captured before the engine clears it), and which had their
+    fitted params replaced by an online calibration refit (with the
+    RETIRED params, whose identity keys the stale cache entries) — so an
+    incremental pass engine can update its persistent indices instead of
+    rebuilding them from every active job.  ``None`` (or simply not
+    passing events) means "unknown delta": incremental engines must
+    rebuild from scratch."""
     arrived: "list[JobState]" = field(default_factory=list)
     completed: "list[tuple[JobState, Placement]]" = field(default_factory=list)
+    # (job with js.fitted already swapped to the NEW params, old params)
+    refit: "list[tuple[JobState, FitParams]]" = field(default_factory=list)
 
 
 @dataclass

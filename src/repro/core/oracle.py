@@ -21,8 +21,9 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core import memory
-from repro.core.perfmodel import (Alloc, Env, FitParams, ModelProfile,
-                                  predict_titer, predict_titer_batch)
+from repro.core.perfmodel import (_BOUNDS, Alloc, Env, FitParams,
+                                  ModelProfile, predict_titer,
+                                  predict_titer_batch)
 from repro.parallel.plan import ExecutionPlan
 from repro.parallel.plan_table import PlanTable
 
@@ -50,24 +51,52 @@ def true_params(model_name: str) -> FitParams:
 
 @dataclass
 class AnalyticOracle:
-    """measure(profile, plan, alloc) -> T_iter seconds (or inf if OOM)."""
+    """measure(profile, plan, alloc) -> T_iter seconds (or inf if OOM).
+
+    ``drifting=True`` slowly perturbs the hidden true params over
+    SIMULATED time (``now``): each of the 7 params follows its own
+    deterministic log-space direction, saturating at
+    ``exp(±drift_scale)`` with time constant ``drift_tau`` — so a model
+    fitted from the t=0 profile grows stale, and online calibration has
+    something real to catch.  The drifted truth is clamped to
+    ``perfmodel._BOUNDS`` so a refit can always reach it (tanh
+    saturation alone is not enough: a hash draw near a bound edge with
+    an outward drift direction would escape)."""
     env: Env = None
     noise: float = 0.01
     wiggle: float = 0.06          # plan-family efficiency deviation
+    drifting: bool = False
+    drift_scale: float = 0.6      # log-space drift amplitude at saturation
+    drift_tau: float = 43200.0    # drift time constant, seconds (12 h)
 
     def __post_init__(self):
         self.env = self.env or Env()
 
+    def true_params_at(self, model_name: str, now: float = 0.0) -> FitParams:
+        """Hidden truth at simulated time ``now`` (= ``true_params`` at
+        t=0 or when drifting is off)."""
+        k = true_params(model_name)
+        if not self.drifting or now <= 0.0:
+            return k
+        v = k.as_vector()
+        dirs = np.array([2.0 * _unit_hash(model_name, "drift", i) - 1.0
+                         for i in range(v.size)])
+        v = v * np.exp(self.drift_scale * dirs * math.tanh(now /
+                                                           self.drift_tau))
+        v = np.clip(v, [b[0] for b in _BOUNDS], [b[1] for b in _BOUNDS])
+        return FitParams.from_vector(v)
+
     def measure(self, profile: ModelProfile, plan: ExecutionPlan,
                 alloc: Alloc, seed: int = 0,
-                env: Env | None = None) -> float:
+                env: Env | None = None, now: float = 0.0) -> float:
         """``env`` overrides the oracle's default environment — the
         simulator passes the per-GPU-type Env of the nodes actually
-        hosting the job on heterogeneous clusters."""
+        hosting the job on heterogeneous clusters.  ``now`` selects the
+        drifted truth on drifting oracles (ignored otherwise)."""
         env = env or self.env
         if not memory.feasible(profile, plan, alloc, env):
             return float("inf")
-        k = true_params(profile.name)
+        k = self.true_params_at(profile.name, now)
         t = predict_titer(profile, plan, alloc, env, k)
         if not math.isfinite(t):
             return float("inf")
@@ -80,8 +109,8 @@ class AnalyticOracle:
         return t * w * noise
 
     def throughput(self, profile, plan, alloc, seed: int = 0,
-                   env: Env | None = None) -> float:
-        t = self.measure(profile, plan, alloc, seed, env=env)
+                   env: Env | None = None, now: float = 0.0) -> float:
+        t = self.measure(profile, plan, alloc, seed, env=env, now=now)
         return profile.b / t if math.isfinite(t) and t > 0 else 0.0
 
     # ------------------------------------------------------------------

@@ -95,6 +95,18 @@ class ModelProfile:
                             t_fwd_unit=t_unit, P_bytes=2.0 * P)
 
 
+def fit_key(profile: ModelProfile) -> tuple:
+    """Full-identity fit-cache key for one model type.
+
+    Fitted params are shared across jobs of the same model type, so the
+    cache key must capture everything the model's shape contributes to
+    T_iter — two jobs sharing a name and batch size but differing in
+    sequence length or depth must NOT share fitted params (the old
+    ``"<name>@b<batch>"`` key silently merged them)."""
+    return (profile.name, profile.s, profile.h, profile.l, profile.P,
+            profile.b)
+
+
 @dataclass(frozen=True)
 class Alloc:
     """A multi-resource allocation (paper: GPU, CPU, memory; bandwidth is an
@@ -408,7 +420,11 @@ def fit(profile: ModelProfile, samples: list[tuple[ExecutionPlan, Alloc, float]]
 
     Paper: ≥7 points, ≥3 exercising ZeRO-Offload when that strategy is in
     the plan space; the model is refit online when prediction error exceeds
-    a threshold (handled by the scheduler loop).
+    a threshold — ``repro.calibration`` implements that loop: the
+    simulator's telemetry feeds a ``DriftDetector``, and
+    ``CalibrationManager`` calls this function with ``x0=current`` for a
+    warm-started refit whose result is published through versioned
+    curve-cache / scheduler-index invalidation.
     """
     from scipy.optimize import minimize
 

@@ -202,6 +202,39 @@ class _PassCtx:
                 if js.job.guaranteed \
                         and sched.quotas.get(js.job.tenant) is not None:
                     self.bump_quota(js.job.tenant)
+        if events.refit:
+            self.apply_refits(events.refit, sched)
+
+    def apply_refits(self, refits, sched) -> None:
+        """A calibration refit replaced a model type's fitted params:
+        every persistent index derived from the retired curve family goes
+        stale at once.  Re-key the job (walk signatures embed
+        ``id(fitted)``), mark it dirty so the slope order re-sorts it
+        under the new curve, un-park its recorded walk outcomes (they
+        were computed against the old envelope), bump every node it
+        resides on (victim indices hold its old ``slope_gpu_down``; the
+        bump also wakes other walks that read those nodes), and bump its
+        tenant's quota subscribers (a refit moves minRes, which moves
+        reservations).  The time-based reconfiguration gate is fitted-
+        independent, so ``gate_wake`` survives."""
+        stale = set()
+        for js, old in refits:
+            stale.add(id(old))
+            jid = id(js)
+            if jid not in self.members:
+                continue           # arrived this very batch: registration
+                                   # indexes it under the new params
+            self.sig_cache.pop(jid, None)
+            self.dirty.add(jid)
+            self.parked_running.discard(jid)
+            self.bump_nodes(set(js.placement))
+            if js.job.guaranteed \
+                    and sched.quotas.get(js.job.tenant) is not None:
+                self.bump_quota(js.job.tenant)
+        # parked queued-walk signatures embed the retired params' id —
+        # every job of the refit model type must walk again
+        self.parked_sigs = {s for s in self.parked_sigs
+                            if s[1] not in stale}
 
     def prune(self, cluster: Cluster) -> None:
         """Compact soft resident lists that accumulated stale entries
@@ -468,6 +501,17 @@ class RubickScheduler:
         self._order_memo.clear()
         self._memo_cluster = None
 
+    def _purge_refit_memos(self, refits) -> None:
+        """Drop memo entries keyed by a retired FitParams identity.  The
+        calibration manager pins retired params (its history), but the
+        entries can never be served again through fresh keys — and if a
+        caller ever dropped the old object, its recycled id() must not
+        alias a brand-new params object into a stale curve."""
+        stale = {id(old) for _, old in refits}
+        for memo in (self._curve_memo, self._order_memo):
+            for k in [k for k in memo if k is not None and k[1] in stale]:
+                del memo[k]
+
     # ------------------------------------------------------------------
     def curve(self, js: JobState, cluster: Cluster,
               env: Env | None = None) -> SensitivityCurve:
@@ -529,8 +573,11 @@ class RubickScheduler:
 
         ``events`` (optional) is the dirty set since the previous pass;
         the incremental engine uses it to keep its indices instead of
-        rebuilding, the full engine ignores it."""
+        rebuilding, the full engine ignores it — except refits, whose
+        identity-keyed memo entries BOTH engines must purge."""
         self._scope_memos(cluster)
+        if events is not None and events.refit:
+            self._purge_refit_memos(events.refit)
         active = [j for j in jobs if j.status != "done"]
         ctx: _PassCtx | None = None
         if self.cfg.pass_engine == "incremental":
@@ -546,6 +593,11 @@ class RubickScheduler:
                     for js in events.arrived:
                         self._ensure_min_res(js, cluster)
                         ctx.register(js)
+                    # refit jobs had min_res/baseline reset by the refit
+                    # application; recompute under the new curve (the
+                    # full engine's every-job ensure loop does the same)
+                    for js, _old in events.refit:
+                        self._ensure_min_res(js, cluster)
                     ctx.prune(cluster)
                 else:
                     # job list changed outside the event stream (direct

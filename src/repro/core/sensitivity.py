@@ -544,6 +544,20 @@ class CurveCache:
                 cpus_per_gpu=cpus_per_gpu, max_ga=max_ga, engine=engine)
         return curve
 
+    def invalidate_fitted(self, fitted: FitParams) -> int:
+        """Drop every curve built on RETIRED fit params (a calibration
+        refit replaced them).  Fresh lookups key on the new params, so
+        the old envelopes/statics can never be read again — release them
+        eagerly instead of leaking one curve family per refit.  Matches
+        by VALUE (cache keys are value-equal frozen dataclasses); a
+        same-valued curve some other consumer still uses is simply
+        rebuilt on its next ``get`` — dropping an entry is never a
+        correctness event, curves are pure functions of their key."""
+        dead = [k for k in self._curves if k[1] == fitted]
+        for k in dead:
+            del self._curves[k]
+        return len(dead)
+
     def clear(self) -> None:
         self._curves.clear()
 

@@ -32,6 +32,17 @@ instant.
 Heterogeneous clusters: a job's true throughput is measured with the Env
 of the GPU type it is placed on (``cluster.envs``); placements never span
 GPU types (the scheduler walks one type group at a time).
+
+Online calibration (``repro.calibration``): pass a ``CalibrationManager``
+and the simulator emits runtime telemetry — measured T_iter at completion
+events, reschedule points, and a periodic ``EV_TELEMETRY`` event — then
+applies drift-triggered refits mid-simulation: every live job of the
+refit model type gets the new params (``min_res``/``baseline_perf`` reset
+for recomputation), and the scheduler pass at that event receives the
+refit in ``SchedEvents.refit`` so BOTH pass engines invalidate their
+identity-keyed state (incremental ≡ full stays bit-exact across refits).
+With a ``drifting=True`` oracle, telemetry events also re-measure running
+jobs (the truth moves between assignments) and re-arm their completions.
 """
 
 from __future__ import annotations
@@ -39,6 +50,7 @@ from __future__ import annotations
 import heapq
 import itertools
 import math
+import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -46,7 +58,7 @@ import numpy as np
 from repro.core.cluster import (Cluster, Job, JobState, SchedEvents,
                                 check_capacity)
 from repro.core.oracle import AnalyticOracle, profiling_samples
-from repro.core.perfmodel import Env, FitParams, fit
+from repro.core.perfmodel import Env, FitParams, fit, fit_key
 from repro.core.sensitivity import get_curve
 
 # A guaranteed job "violates" when its measured throughput drops below its
@@ -57,8 +69,8 @@ GUARANTEE_TOL = 0.1
 
 # event kinds, in tie-break order at one instant: arrivals and completions
 # (the state changes) are folded into a single scheduler pass, then pause
-# expiries resume jobs
-EV_ARRIVAL, EV_COMPLETION, EV_PAUSE_END = 0, 1, 2
+# expiries resume jobs, then telemetry samples the settled state
+EV_ARRIVAL, EV_COMPLETION, EV_PAUSE_END, EV_TELEMETRY = 0, 1, 2, 3
 
 
 @dataclass
@@ -71,6 +83,10 @@ class SimResult:
     jct_by_class: dict[str, list[float]] = field(default_factory=dict)
     n_events: int = 0                 # event-engine: events processed
     n_sched_calls: int = 0            # full scheduler passes
+    # model types whose initial fit fell back to default FitParams (too
+    # few feasible profiling samples) — uncalibrated until a refit
+    unfitted: list[str] = field(default_factory=list)
+    n_refits: int = 0                 # online calibration refits applied
 
     @property
     def avg_jct(self) -> float:
@@ -89,6 +105,10 @@ class SimResult:
                "makespan_h": self.makespan / 3600,
                "n_reconfig": self.n_reconfig,
                "guarantee_violations": self.guarantee_violations}
+        if self.unfitted:
+            out["unfitted_models"] = list(self.unfitted)
+        if self.n_refits:
+            out["n_refits"] = self.n_refits
         for cls, vals in self.jct_by_class.items():
             out[f"avg_jct_{cls}_h"] = float(np.mean(vals)) / 3600 if vals else 0
         return out
@@ -97,7 +117,8 @@ class SimResult:
 class Simulator:
     def __init__(self, cluster: Cluster, scheduler, oracle=None,
                  env: Env | None = None, reconfig_cost: float = 78.0,
-                 fit_cache: dict | None = None, mode: str = "event"):
+                 fit_cache: dict | None = None, mode: str = "event",
+                 calibration=None, telemetry_interval: float = 300.0):
         self.cluster = cluster
         self.scheduler = scheduler
         self.env = env or Env()
@@ -105,19 +126,42 @@ class Simulator:
         self.reconfig_cost = reconfig_cost
         self.fit_cache = fit_cache if fit_cache is not None else {}
         self.mode = mode
+        # online calibration (repro.calibration.CalibrationManager or any
+        # object with ensure/observe/poll); None = telemetry disabled
+        self.calibration = calibration
+        self.telemetry_interval = telemetry_interval
+        self._unfitted: set[tuple] = set()   # fit_keys that fell back to
+                                             # default FitParams
+        # drifting oracles take the measurement time (the hidden truth
+        # moves); static oracles keep their plain signature
+        self._drifting = bool(getattr(self.oracle, "drifting", False))
 
     # ------------------------------------------------------------------
     def _fitted(self, job: Job) -> FitParams:
         """Per-model-type fitted params (paper: model reused across jobs of
-        the same model-type flag; profiling takes ~210 s once)."""
-        key = job.profile.name + f"@b{job.profile.b}"
-        if key not in self.fit_cache:
+        the same model-type flag; profiling takes ~210 s once).  Keyed on
+        the FULL profile identity (``perfmodel.fit_key``): two jobs
+        sharing a name and batch size but differing in sequence length or
+        depth must not share fitted params."""
+        key = fit_key(job.profile)
+        params = self.fit_cache.get(key)
+        if params is None:
             samples = profiling_samples(job.profile, self.oracle)
             if len(samples) >= 4:
-                self.fit_cache[key] = fit(job.profile, samples, self.env)
+                params = fit(job.profile, samples, self.env)
             else:
-                self.fit_cache[key] = FitParams()
-        return self.fit_cache[key]
+                params = FitParams()
+                self._unfitted.add(key)
+                warnings.warn(
+                    f"{job.profile.name}: only {len(samples)} feasible "
+                    "profiling samples (<4); falling back to default "
+                    "FitParams — predictions are uncalibrated until an "
+                    "online refit", stacklevel=2)
+            self.fit_cache[key] = params
+        if self.calibration is not None:
+            self.calibration.ensure(job.profile, params,
+                                    fallback=key in self._unfitted)
+        return params
 
     def _env_of(self, js: JobState) -> Env:
         """Env of the GPU type hosting the job (placements are single-type
@@ -127,12 +171,52 @@ class Simulator:
             return self.cluster.env_for(nid, self.env) or self.env
         return self.env
 
-    def _true_throughput(self, js: JobState) -> float:
+    def _true_throughput(self, js: JobState, now: float = 0.0) -> float:
         if js.status != "running" or js.plan is None or js.alloc is None:
             return 0.0
-        t = self.oracle.measure(js.job.profile, js.plan, js.alloc,
-                                env=self._env_of(js))
+        if self._drifting:
+            t = self.oracle.measure(js.job.profile, js.plan, js.alloc,
+                                    env=self._env_of(js), now=now)
+        else:
+            t = self.oracle.measure(js.job.profile, js.plan, js.alloc,
+                                    env=self._env_of(js))
         return js.job.profile.b / t if math.isfinite(t) and t > 0 else 0.0
+
+    def _observe(self, js: JobState, thpt: float, now: float) -> None:
+        """Emit one telemetry observation (measured T_iter) for a running
+        job to the calibration manager."""
+        if self.calibration is None or thpt <= 0.0:
+            return
+        self.calibration.observe(js.job.profile, js.fitted, js.plan,
+                                 js.alloc, self._env_of(js),
+                                 js.job.profile.b / thpt, now)
+
+    def _apply_refit(self, refit, states: list[JobState],
+                     active_ids: set[int]) -> list[tuple[JobState,
+                                                         FitParams]]:
+        """Swap a refit's new params into every live job still carrying
+        the retired ones, resetting the derived per-job state (minRes,
+        guarantee baseline) so the next scheduler pass recomputes it
+        under the new curve.  Returns the (job, old params) pairs for
+        ``SchedEvents.refit`` — active jobs only; pending arrivals are
+        swapped too but enter the scheduler's indices on arrival."""
+        key = fit_key(refit.profile)
+        self.fit_cache[key] = refit.new
+        # the published params are a real telemetry fit now, not the
+        # default fallback: stop treating the type as uncalibrated
+        # (a later run() would otherwise re-register it as a priority
+        # candidate that refits unconditionally forever)
+        self._unfitted.discard(key)
+        out = []
+        for s in states:
+            if s.fitted is not refit.old or s.status == "done":
+                continue
+            s.fitted = refit.new
+            s.min_res = None
+            s.baseline_perf = 0.0
+            if id(s) in active_ids:
+                out.append((s, refit.old))
+        return out
 
     def _prewarm(self, states: list[JobState]) -> None:
         """Pre-warm the process-wide CurveCache: every job of the same
@@ -165,17 +249,21 @@ class Simulator:
     def _run_event(self, jobs: list[Job], max_time: float) -> SimResult:
         states = [JobState(job=j, fitted=self._fitted(j)) for j in jobs]
         self._prewarm(states)
+        cal = self.calibration
         seq = itertools.count()
         heap: list[tuple[float, int, int, object]] = []
         for s in states:
             heapq.heappush(heap, (s.job.submit, EV_ARRIVAL, next(seq), s))
+        if cal is not None and states:
+            heapq.heappush(heap, (self.telemetry_interval, EV_TELEMETRY,
+                                  next(seq), None))
 
         active: list[JobState] = []        # arrived, not yet done
         done: list[JobState] = []
         pause_until: dict[int, float] = {}
         epoch: dict[int, int] = {}         # completion-event invalidation
         thpt: dict[int, float] = {}        # oracle samples/s per assignment
-        violations = n_events = n_sched = 0
+        violations = n_events = n_sched = n_refits = 0
         t = 0.0
 
         def advance(to: float) -> None:
@@ -197,10 +285,12 @@ class Simulator:
                         / s.job.profile.b
 
         def resample(s: JobState, now: float) -> None:
-            """Re-measure the oracle (assignment changed) and re-arm the
-            completion event from the job's exact remaining work."""
-            th = thpt[id(s)] = self._true_throughput(s)
+            """Re-measure the oracle (assignment changed — a reschedule
+            point, also a telemetry emission) and re-arm the completion
+            event from the job's exact remaining work."""
+            th = thpt[id(s)] = self._true_throughput(s, now)
             e = epoch[id(s)] = epoch.get(id(s), 0) + 1
+            self._observe(s, th, now)
             if th <= 0.0:
                 return
             remain = (s.job.target_iters - s.progress) \
@@ -229,11 +319,13 @@ class Simulator:
             t = t_ev
             n_events += len(batch)
             state_changed = False
+            tel_due = False
             resumed: list[JobState] = []
             # event-scoped dirty sets: the incremental scheduler engine
             # updates its persistent indices from exactly what changed
             ev_arrived: list[JobState] = []
             ev_completed: list[tuple] = []
+            ev_refit: list[tuple] = []
             for _, kind, _, payload in batch:
                 if kind == EV_ARRIVAL:
                     active.append(payload)
@@ -246,16 +338,45 @@ class Simulator:
                     s.progress = max(s.progress, s.job.target_iters)
                     s.status = "done"
                     s.finish_time = t
+                    # telemetry: the job's last measured rate, at finish
+                    self._observe(s, thpt.get(id(s), 0.0), t)
                     ev_completed.append((s, dict(s.placement)))
                     s.placement = {}
                     active.remove(s)
                     done.append(s)
                     state_changed = True
-                else:                                  # EV_PAUSE_END
+                elif kind == EV_PAUSE_END:
                     s = payload
                     if s.status == "running" \
                             and pause_until.get(id(s), 0.0) <= t + 1e-9:
                         resumed.append(s)
+                else:                                  # EV_TELEMETRY
+                    tel_due = True
+
+            if tel_due:
+                # periodic telemetry: sample every running unpaused job.
+                # Under a drifting oracle the truth moved since the last
+                # assignment change, so re-measure and re-arm completions
+                # (resample also records the observation); otherwise the
+                # cached per-assignment sample is still exact — record it
+                # without touching simulation dynamics.
+                for s in active:
+                    if s.status != "running" \
+                            or pause_until.get(id(s), 0.0) > t:
+                        continue
+                    if self._drifting:
+                        resample(s, t)
+                    else:
+                        self._observe(s, thpt.get(id(s), 0.0), t)
+                for refit in cal.poll(t):
+                    ev_refit += self._apply_refit(refit, states,
+                                                  {id(s) for s in active})
+                    n_refits += 1
+                if ev_refit:
+                    state_changed = True
+                if active or heap:     # quiesced + drained ⇒ stop ticking
+                    heapq.heappush(heap, (t + self.telemetry_interval,
+                                          EV_TELEMETRY, next(seq), None))
 
             if state_changed:
                 prev = {id(s): (s.plan, s.alloc, s.status, s.placement)
@@ -264,7 +385,8 @@ class Simulator:
                     self.scheduler.schedule(
                         active, self.cluster, t,
                         events=SchedEvents(arrived=ev_arrived,
-                                           completed=ev_completed))
+                                           completed=ev_completed,
+                                           refit=ev_refit))
                 else:
                     self.scheduler.schedule(active, self.cluster, t)
                 n_sched += 1
@@ -300,7 +422,8 @@ class Simulator:
 
         self.last_states = states          # inspectable by tests/benchmarks
         return self._assemble(active + done, t, violations,
-                              n_events=n_events, n_sched=n_sched)
+                              n_events=n_events, n_sched=n_sched,
+                              n_refits=n_refits)
 
     # ------------------------------------------------------------------
     # discrete-time reference loop (the original polling engine)
@@ -308,13 +431,16 @@ class Simulator:
     def _run_discrete(self, jobs: list[Job], max_time: float) -> SimResult:
         states = [JobState(job=j, fitted=self._fitted(j)) for j in jobs]
         self._prewarm(states)
+        cal = self.calibration
         arrivals = sorted(states, key=lambda s: s.job.submit)
         t = 0.0
+        next_tel = self.telemetry_interval if cal is not None else math.inf
         pending: list[JobState] = list(arrivals)
         active: list[JobState] = []
         pause_until: dict[int, float] = {}
         violations = 0
         n_sched = 0
+        n_refits = 0
 
         def next_arrival() -> float:
             return pending[0].job.submit if pending else math.inf
@@ -343,7 +469,7 @@ class Simulator:
                 if pause_until.get(id(s), 0.0) > t:
                     thpts[id(s)] = 0.0
                     continue
-                thpts[id(s)] = self._true_throughput(s)
+                thpts[id(s)] = self._true_throughput(s, t)
                 # performance-guarantee accounting (paper Sec 5.1):
                 # reconfiguration pauses are excluded (they are governed
                 # by the reconfig-penalty threshold instead)
@@ -352,8 +478,25 @@ class Simulator:
                         < s.baseline_perf * (1.0 - GUARANTEE_TOL)):
                     violations += 1
 
+            # periodic telemetry + drift-triggered refits (the refit takes
+            # effect at the NEXT pass — this loop rebuilds scheduler state
+            # from the live job states every step anyway)
+            if cal is not None and t + 1e-9 >= next_tel:
+                for s in active:
+                    if s.status == "running" \
+                            and pause_until.get(id(s), 0.0) <= t:
+                        self._observe(s, thpts.get(id(s), 0.0), t)
+                for refit in cal.poll(t):
+                    self._apply_refit(refit, states,
+                                      {id(s) for s in active})
+                    n_refits += 1
+                while next_tel <= t + 1e-9:
+                    next_tel += self.telemetry_interval
+
             # time to next event
             dt = next_arrival() - t
+            if cal is not None:
+                dt = min(dt, next_tel - t)     # land on telemetry ticks
             for s in active:
                 if s.status != "running":
                     continue
@@ -387,7 +530,7 @@ class Simulator:
                     continue
                 th = thpts[id(s)]
                 if pu > t:       # resumed mid-window: sample AT the resume
-                    th = self._true_throughput(s)
+                    th = self._true_throughput(s, pu)
                 s.progress += th * eff / s.job.profile.b
                 if s.progress >= s.job.target_iters - 1e-6:
                     s.status = "done"
@@ -396,11 +539,13 @@ class Simulator:
             t += dt
 
         self.last_states = states          # inspectable by tests/benchmarks
-        return self._assemble(active, t, violations, n_sched=n_sched)
+        return self._assemble(active, t, violations, n_sched=n_sched,
+                              n_refits=n_refits)
 
     # ------------------------------------------------------------------
     def _assemble(self, arrived: list[JobState], t: float, violations: int,
-                  n_events: int = 0, n_sched: int = 0) -> SimResult:
+                  n_events: int = 0, n_sched: int = 0,
+                  n_refits: int = 0) -> SimResult:
         jcts = {}
         by_class: dict[str, list[float]] = {"guaranteed": [],
                                             "best_effort": []}
@@ -413,6 +558,10 @@ class Simulator:
             by_class[cls].append(jcts[s.job.name])
             n_rcfg += s.n_reconfig
         makespan = max((s.finish_time for s in arrived), default=0.0)
+        keys = {fit_key(s.job.profile) for s in arrived}
         return SimResult(getattr(self.scheduler, "name", "?"), jcts,
                          makespan, n_rcfg, violations, by_class,
-                         n_events=n_events, n_sched_calls=n_sched)
+                         n_events=n_events, n_sched_calls=n_sched,
+                         unfitted=sorted({k[0] for k in
+                                          self._unfitted & keys}),
+                         n_refits=n_refits)

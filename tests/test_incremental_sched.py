@@ -15,9 +15,12 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.calibration import (CalibrationManager, DriftConfig,
+                               DriftDetector)
 from repro.core import baselines, paper_models, trace
 from repro.core.cluster import (Cluster, Job, JobState, SchedEvents,
                                 check_capacity, hetero_cluster)
+from repro.core.oracle import AnalyticOracle
 from repro.core.perfmodel import FitParams
 from repro.core.scheduler import RubickScheduler, SchedulerConfig
 from repro.parallel.plan import ExecutionPlan
@@ -246,6 +249,136 @@ def test_reset_indices_clears_state():
     assert sched._ctx is not None
     sched.reset_indices()
     assert sched._ctx is None and not sched._curve_memo
+
+
+# --- mid-simulation refit parity (ISSUE 4: ctx-index bump guard) -------------
+
+def test_refit_event_parity_direct():
+    """Inject a calibration refit between passes: both engines must make
+    identical decisions afterwards.  The refit changes the model type's
+    curve family, so the full engine naturally re-derives new plans /
+    slopes — the incremental engine must reach the same decisions through
+    ``SchedEvents.refit`` invalidation (re-keyed walk signatures, dirty
+    slope order, bumped victim indices, un-parked walks).  Without the
+    ctx-index bump the refit job stays parked on its stale no-op walk and
+    silently keeps the OLD plan."""
+    prof_a = paper_models.profile("roberta-355m")
+    prof_b = paper_models.profile("llama2-7b")
+
+    def job(name, prof, g, submit=0.0, guaranteed=True, tenant="A"):
+        return Job(name=name, profile=prof, submit=submit, target_iters=1e6,
+                   req_gpus=g, req_cpus=12 * g,
+                   orig_plan=ExecutionPlan(dp=1), guaranteed=guaranteed,
+                   tenant=tenant)
+
+    old = FitParams()
+    new = FitParams(k_bwd=3.2, k_sync=4.0, k_const=0.12)
+
+    def world(engine):
+        cluster = Cluster(n_nodes=2)
+        sched = RubickScheduler(cfg=SchedulerConfig(pass_engine=engine))
+        g1 = JobState(job=job("g1", prof_a, 8), fitted=old)
+        g2 = JobState(job=job("g2", prof_b, 8), fitted=old)
+        be = JobState(job=job("be", prof_a, 4, guaranteed=False,
+                              tenant="B"), fitted=old)
+        states = [g1, g2, be]
+        snaps = []
+
+        def run_pass(now, events):
+            for s in states:
+                if s.status == "running":
+                    s.run_time = now          # run_time tracks sim time
+            sched.schedule(states, cluster, now, events=events)
+            assert check_capacity(cluster, states)
+            snaps.append([(s.status, s.plan, s.alloc, dict(s.placement),
+                           s.n_reconfig) for s in states])
+
+        run_pass(0.0, SchedEvents(arrived=states))
+        run_pass(60.0, SchedEvents())          # parks walk outcomes
+        # --- the refit: swap params on every roberta job, reset the
+        # derived state, and announce it as a first-class event ---------
+        refit = []
+        for s in (g1, be):
+            s.fitted = new
+            s.min_res = None
+            s.baseline_perf = 0.0
+            refit.append((s, old))
+        run_pass(600.0, SchedEvents(refit=refit))
+        run_pass(3600.0, SchedEvents())        # reconfig gates now open
+        run_pass(7200.0, SchedEvents())
+        return snaps
+
+    assert world("full") == world("incremental")
+
+
+def test_refit_without_event_would_go_stale():
+    """Contract documentation: the direct-call path (no events) rebuilds
+    every index from live states, so even an unannounced fitted swap is
+    picked up — the events path is what makes it O(changed)."""
+    prof = paper_models.profile("roberta-355m")
+    cluster = Cluster(n_nodes=1)
+    sched = RubickScheduler(cfg=SchedulerConfig(pass_engine="incremental"))
+    js = JobState(job=_job("j", prof, 4), fitted=FitParams())
+    sched.schedule([js], cluster, 0.0)         # no events: rebuild path
+    assert js.status == "running"
+    plan_before = js.plan
+    js.fitted = FitParams(k_bwd=3.5, k_const=0.2)
+    js.min_res = None
+    js.baseline_perf = 0.0
+    js.run_time = 7200.0                       # keep the reconfig gate open
+    sched.schedule([js], cluster, 7200.0)      # rebuild sees the new params
+    full = RubickScheduler(cfg=SchedulerConfig(pass_engine="full"))
+    mirror = JobState(job=js.job, fitted=FitParams())
+    full.schedule([mirror], cluster, 0.0)
+    assert mirror.plan == plan_before
+    mirror.fitted = js.fitted
+    mirror.min_res = None
+    mirror.baseline_perf = 0.0
+    mirror.run_time = 7200.0
+    full.schedule([mirror], cluster, 7200.0)
+    assert (js.status, js.plan, js.alloc) == \
+        (mirror.status, mirror.plan, mirror.alloc)
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 200),
+       variant=st.sampled_from(["base", "mt", "hetero"]))
+def test_parity_property_across_refits(seed, variant):
+    """Property: a full event-driven simulation with a DRIFTING oracle and
+    online calibration makes bit-exact identical decisions under both
+    pass engines — including the passes triggered by mid-simulation
+    refits — and performs the same refits at the same times."""
+    quotas = {"A": 24} if variant == "mt" else None
+    gpu_types = [t for t, _ in HET_SPEC] if variant == "hetero" else None
+    jobs = trace.philly(n_jobs=24, hours=4, seed=seed, load_scale=3.0,
+                        variant=variant, gpu_types=gpu_types)
+    mk = (lambda: hetero_cluster(HET_SPEC)) if variant == "hetero" \
+        else (lambda: Cluster(n_nodes=6))
+    from repro.core.simulator import Simulator
+    # warm the shared base fits once; each world gets a COPY (refits write
+    # the new params back into the simulator's cache)
+    warm = Simulator(Cluster(n_nodes=1), baselines.make_rubick(),
+                     fit_cache=FIT_CACHE)
+    for j in jobs:
+        warm._fitted(j)
+
+    def world(engine):
+        cal = CalibrationManager(detector=DriftDetector(DriftConfig(
+            threshold=0.08, min_observations=6, cooldown_s=3600.0)))
+        sched = baselines.ALL["rubick"](quotas=quotas, pass_engine=engine)
+        sim = Simulator(mk(), sched,
+                        oracle=AnalyticOracle(drifting=True,
+                                              drift_tau=7200.0),
+                        fit_cache=dict(FIT_CACHE), calibration=cal,
+                        telemetry_interval=600.0)
+        return sim.run(jobs), cal
+
+    (full, cal_f) = world("full")
+    (inc, cal_i) = world("incremental")
+    _assert_exact(full, inc)
+    assert full.n_refits == inc.n_refits
+    assert [(r.t, r.profile.name, r.version) for r in cal_f.history] == \
+        [(r.t, r.profile.name, r.version) for r in cal_i.history]
 
 
 # --- starvation promotion parity (direct, deterministic) ---------------------

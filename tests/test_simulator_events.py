@@ -9,7 +9,7 @@ from hypothesis import strategies as st
 from repro.core import baselines, paper_models, trace
 from repro.core.cluster import Cluster, Job, hetero_cluster
 from repro.core.oracle import AnalyticOracle
-from repro.core.perfmodel import Alloc, FitParams
+from repro.core.perfmodel import Alloc, FitParams, fit_key
 from repro.core.simulator import Simulator
 from repro.parallel.plan import ExecutionPlan
 
@@ -114,7 +114,7 @@ def test_subsecond_resume_window_not_dropped():
         sim = Simulator(Cluster(n_nodes=1),
                         _ScriptedScheduler(plan_a, plan_b, t_switch),
                         oracle=oracle, reconfig_cost=delta,
-                        fit_cache={f"{prof.name}@b{prof.b}": FitParams()},
+                        fit_cache={fit_key(prof): FitParams()},
                         mode=mode)
         res = sim.run(jobs, max_time=600.0)
         assert res.jcts["target"] == pytest.approx(expected_jct,
