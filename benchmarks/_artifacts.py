@@ -49,17 +49,21 @@ def prewarmed_fit_cache() -> dict:
     """Fits for every Table-2 model, keyed like ``Simulator._fitted``
     (``perfmodel.fit_key(profile)`` — the FULL profile identity, so
     profiles sharing a name and batch but differing in shape never share
-    fitted params).  Callers should take a copy (``dict(...)``) when
+    fitted params).  All seven models are fitted in ONE ``fit_batch``
+    call — the same batched cold-start path ``Simulator._prefit`` uses,
+    so seeding a simulator's ``fit_cache`` with a copy stays
+    result-identical.  Callers should take a copy (``dict(...)``) when
     handing it to a Simulator so later mutations (e.g. online-calibration
     refits) stay local."""
     if not _FIT_CACHE:
         from repro.core import paper_models
-        from repro.core.oracle import AnalyticOracle, profiling_samples
-        from repro.core.perfmodel import Env, FitParams, fit, fit_key
-        oracle = AnalyticOracle()
-        env = Env()
-        for prof in paper_models.TABLE2.values():
-            samples = profiling_samples(prof, oracle)
-            _FIT_CACHE[fit_key(prof)] = fit(prof, samples, env) \
-                if len(samples) >= 4 else FitParams()
+        from repro.core.fitting import fit_batch
+        from repro.core.oracle import AnalyticOracle, profiling_requests
+        from repro.core.perfmodel import Env, FitParams, fit_key
+        requests, skipped = profiling_requests(
+            paper_models.TABLE2.values(), AnalyticOracle(), Env())
+        for req, params in zip(requests, fit_batch(requests)):
+            _FIT_CACHE[fit_key(req.profile)] = params
+        for prof, _samples in skipped:
+            _FIT_CACHE[fit_key(prof)] = FitParams()
     return _FIT_CACHE

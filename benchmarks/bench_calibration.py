@@ -39,6 +39,13 @@ DRIFT_TAU = 7200.0                # 2 h drift time constant
 TELEMETRY_S = 120.0               # dense sampling: even short-lived rare
                                   # model types clear the evidence floor
 
+# CI fit-overhead gate (--smoke): total batched-fitting wall-clock of the
+# refits-on world, recorded from the committed BENCH_calibration.json
+# artifact of this machine class.  A >2x regression fails the run — the
+# whole point of the batched engine is that online refits stay cheaper
+# than the scheduling they steer.
+FIT_S_ON_SMOKE_REF = 2.4
+
 
 def _world(jobs, n_nodes, cache, enabled, engine="incremental"):
     cal = CalibrationManager(
@@ -136,6 +143,14 @@ def accuracy_rows(smoke: bool) -> list[dict]:
             "refit_parity_incremental_vs_full": bool(exact),
             "sim_s_on": round(t_on, 2),
             "sim_s_off": round(t_off, 2),
+            # calibration overhead = what enabling refits costs; fit
+            # time is reported separately (not buried in sim_s_on) so
+            # the batched-engine speedup stays auditable
+            "overhead_s": round(t_on - t_off, 2),
+            "fit_s_on": round(cal_on.fit_stats.seconds, 3),
+            "fit_s_off": round(cal_off.fit_stats.seconds, 3),
+            "n_fit_iters": cal_on.fit_stats.iters,
+            "n_fit_evals": cal_on.fit_stats.evals,
             "err_timeline_off": _timeline(cal_off),
             "err_timeline_on": _timeline(cal_on),
         }}]
@@ -159,6 +174,11 @@ def main(argv: list[str]) -> int:
     if not d["pass_2x"]:
         print(f"FAIL: calibration RMSLE reduction "
               f"{d['rmsle_reduction_x']}x < 2x", file=sys.stderr)
+        return 1
+    if "--smoke" in argv and d["fit_s_on"] > 2.0 * FIT_S_ON_SMOKE_REF:
+        print(f"FAIL: fit overhead {d['fit_s_on']}s > 2x recorded "
+              f"artifact ({FIT_S_ON_SMOKE_REF}s) — batched fitting "
+              "engine regressed", file=sys.stderr)
         return 1
     return 0
 

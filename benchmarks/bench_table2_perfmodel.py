@@ -12,24 +12,37 @@ import math
 import time
 from collections import defaultdict
 
+import numpy as np
+
 from repro.core import paper_models
-from repro.core.oracle import AnalyticOracle, profiling_samples
-from repro.core.perfmodel import Alloc, fit, predict_titer
+from repro.core.fitting import FitRequest, fit_batch
+from repro.core.oracle import AnalyticOracle, profiling_requests
+from repro.core.perfmodel import Alloc, predict_titer_batch
 from repro.parallel.plan import enumerate_plans
+from repro.parallel.plan_table import PlanColumns
 
 
 def run() -> list[dict]:
     oracle = AnalyticOracle()
+    # one batched multi-start pass fits all seven models together; models
+    # under the ≥4-sample floor (llama-30b OOMs most probe plans at 8
+    # GPUs) are still fitted on what they have — Table 2 reports their
+    # earned error rather than hiding them behind the default fallback
+    requests, skipped = profiling_requests(paper_models.TABLE2.values(),
+                                           oracle)
+    requests += [FitRequest(profile=prof, samples=tuple(samples),
+                            env=oracle.env)
+                 for prof, samples in skipped]
+    fits = {req.profile.name: (req, k)
+            for req, k in zip(requests, fit_batch(requests))}
     rows = []
     for name, prof in paper_models.TABLE2.items():
         t0 = time.time()
-        samples = profiling_samples(prof, oracle)
-        k = fit(prof, samples)
-        seen = {(p, a.gpus) for p, a, _ in samples}
-        errs_by_family: dict[str, list[float]] = defaultdict(list)
+        req, k = fits[name]
+        seen = {(p, a.gpus) for p, a, _ in req.samples}
         max_g = 8 if name in paper_models.SMALL else 64
         gpus_list = [g for g in (1, 2, 4, 8, 16, 32, 64) if g <= max_g]
-        n_unseen = 0
+        unseen: list[tuple] = []              # (plan, alloc, t_true)
         for g in gpus_list:
             alloc = Alloc(g, 12 * g)
             for plan in enumerate_plans(
@@ -38,12 +51,23 @@ def run() -> list[dict]:
                 if (plan, g) in seen:
                     continue
                 t_true = oracle.measure(prof, plan, alloc)
-                t_pred = predict_titer(prof, plan, alloc, oracle.env, k)
-                if not (math.isfinite(t_true) and math.isfinite(t_pred)):
-                    continue
-                fam = plan.strategy.split("+")[0]
-                errs_by_family[fam].append(abs(t_pred - t_true) / t_true)
-                n_unseen += 1
+                if math.isfinite(t_true):
+                    unseen.append((plan, alloc, t_true))
+        # all unseen configurations predicted in one batched pass
+        cols = PlanColumns.from_plans([pl for pl, _, _ in unseen])
+        t_pred = predict_titer_batch(
+            prof, cols,
+            np.array([al.gpus for _, al, _ in unseen]),
+            np.array([al.cpus for _, al, _ in unseen], float),
+            oracle.env, k)
+        errs_by_family: dict[str, list[float]] = defaultdict(list)
+        n_unseen = 0
+        for (plan, _al, t_true), pred in zip(unseen, t_pred):
+            if not math.isfinite(pred):
+                continue
+            fam = plan.strategy.split("+")[0]
+            errs_by_family[fam].append(abs(pred - t_true) / t_true)
+            n_unseen += 1
         all_errs = [e for v in errs_by_family.values() for e in v]
         row = {
             "name": "table2/" + name,

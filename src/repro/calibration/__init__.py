@@ -15,10 +15,13 @@ stale 7-point profile.  This package closes that loop for the repro:
     (too few feasible profiling samples) are highest-priority: they
     refit as soon as enough observations exist, threshold or not.
   * ``CalibrationManager`` — owns versioned ``FitParams`` per model
-    type, performs warm-started refits (``fit(..., x0=current)``), and
-    publishes each ``Refit`` so consumers can invalidate every derived
-    structure (CurveCache entries, scheduler memos, incremental-pass
-    indices) — see ``SchedEvents.refit`` and ``_PassCtx.apply_refits``.
+    type, collects every drifted type at a telemetry tick into ONE
+    warm-started ``repro.core.fitting.fit_batch`` call (all refits'
+    restarts step as a single batched simplex tensor; ``x0=current``
+    guarantees ``rmsle_after ≤ rmsle_before``), and publishes each
+    ``Refit`` so consumers can invalidate every derived structure
+    (CurveCache entries, scheduler memos, incremental-pass indices) —
+    see ``SchedEvents.refit`` and ``_PassCtx.apply_refits``.
 """
 
 from repro.calibration.drift import DriftConfig, DriftDetector, window_rmsle

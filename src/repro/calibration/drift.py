@@ -25,15 +25,18 @@ def window_rmsle(window) -> float:
     """RMSLE of predicted vs measured T_iter over an observation window
     (nan when no finite pairs exist) — delegates to ``perfmodel.rmsle``
     so the drift trigger and the fit optimizer always agree on what
-    "error" means."""
-    pred, true = [], []
-    for o in window:
-        if math.isfinite(o.predicted) and o.predicted > 0 and o.t_iter > 0:
-            pred.append(o.predicted)
-            true.append(o.t_iter)
-    if not pred:
+    "error" means.  Runs once per observed model type at EVERY telemetry
+    tick (the manager's error timeline), so the filter is one vectorized
+    mask instead of a Python loop over the window."""
+    n = len(window)
+    if n == 0:
         return float("nan")
-    return rmsle(np.asarray(pred), np.asarray(true))
+    pred = np.fromiter((o.predicted for o in window), float, count=n)
+    true = np.fromiter((o.t_iter for o in window), float, count=n)
+    ok = np.isfinite(pred) & (pred > 0) & (true > 0)
+    if not ok.any():
+        return float("nan")
+    return rmsle(pred[ok], true[ok])
 
 
 @dataclass

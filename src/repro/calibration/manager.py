@@ -36,7 +36,8 @@ import numpy as np
 
 from repro.calibration.drift import DriftDetector, window_rmsle
 from repro.calibration.store import Observation, ObservationStore
-from repro.core.perfmodel import (Alloc, Env, FitParams, ModelProfile, fit,
+from repro.core.fitting import FitRequest, FitStats, fit_batch
+from repro.core.perfmodel import (Alloc, Env, FitParams, ModelProfile,
                                   fit_key, predict_titer, rmsle)
 from repro.core.sensitivity import CURVES
 from repro.parallel.plan import ExecutionPlan
@@ -68,11 +69,16 @@ class CalibrationManager:
     def __init__(self, env: Env | None = None,
                  store: ObservationStore | None = None,
                  detector: DriftDetector | None = None,
-                 enabled: bool = True):
+                 enabled: bool = True, refit_restarts: int = 2):
         self.env = env or Env()
         self.store = store or ObservationStore()
         self.detector = detector or DriftDetector()
         self.enabled = enabled
+        # warm-started refits refine an already-calibrated incumbent:
+        # the warm vertex dominates, so fewer multi-start probes than a
+        # cold fit (fit_batch's default 3) are needed — keep ≥2 so one
+        # noisy restart can still escape a bad incumbent basin
+        self.refit_restarts = refit_restarts
         self._current: dict[tuple, FitParams] = {}
         self._profiles: dict[tuple, ModelProfile] = {}
         self._versions: dict[tuple, int] = {}
@@ -81,6 +87,9 @@ class CalibrationManager:
                                              # module docstring)
         # (t, key, window RMSLE) per poll — prediction error over time
         self.error_log: list[tuple[float, tuple, float]] = []
+        # accumulated fitting-engine cost across all refits (benches
+        # report this separately from simulation wall-clock)
+        self.fit_stats = FitStats()
 
     # ------------------------------------------------------------------
     def ensure(self, profile: ModelProfile, params: FitParams,
@@ -126,9 +135,12 @@ class CalibrationManager:
     def poll(self, now: float) -> list[Refit]:
         """Evaluate drift on every observed model type; refit the ones
         over threshold (or priority fallbacks with enough evidence).
-        Returns the refits for the caller to propagate — see the module
-        docstring for the invalidation contract."""
-        out: list[Refit] = []
+        Every drifted type at this tick is collected into ONE
+        ``fit_batch`` call — all refits' restarts step as a single
+        batched simplex tensor — and each result is published
+        individually.  Returns the refits for the caller to propagate —
+        see the module docstring for the invalidation contract."""
+        pending: list[tuple[tuple, list]] = []   # (key, majority-env sub)
         for key in self.store.keys():
             win = self.store.window(key)
             fresh = self.detector.fresh(key, win)
@@ -141,19 +153,29 @@ class CalibrationManager:
                     key, win, now, priority=key in self._priority,
                     fresh=fresh, err=err):
                 continue
-            refit = self._refit(key, win, now)
-            if refit is not None:
-                out.append(refit)
-        return out
+            sub = self._refit_window(win)
+            if sub is not None:
+                pending.append((key, sub))
+        if not pending:
+            return []
+        requests = [FitRequest(
+            profile=self._profiles[key],
+            samples=tuple((o.plan, o.alloc, o.t_iter) for o in sub),
+            env=sub[0].env, x0=self._current[key])    # warm start
+            for key, sub in pending]
+        fitted = fit_batch(requests, n_restarts=self.refit_restarts,
+                           stats=self.fit_stats)
+        return [self._publish(key, sub, new, now)
+                for (key, sub), new in zip(pending, fitted)]
 
-    def _refit(self, key: tuple, win, now: float) -> Refit | None:
-        profile = self._profiles[key]
-        cur = self._current[key]
-        # fit() takes one Env, so the refit works on the window's
-        # majority-environment subset (heterogeneous pools contribute
-        # per-type observations) — fitting AND scoring on the same
-        # subset makes the warm-start guarantee exact: the optimizer
-        # starts from the incumbent's loss and can only improve it
+    @staticmethod
+    def _refit_window(win) -> list | None:
+        """The window's majority-environment subset, or None below the
+        fit floor.  The fit takes one Env, so the refit works on the
+        majority-env subset (heterogeneous pools contribute per-type
+        observations) — fitting AND scoring on the same subset makes the
+        warm-start guarantee exact: the optimizer starts from the
+        incumbent's loss and can only improve it."""
         env_counts: dict[Env, int] = {}
         for o in win:
             env_counts[o.env] = env_counts.get(o.env, 0) + 1
@@ -166,8 +188,13 @@ class CalibrationManager:
             # mixed window can spread thin — wait for more telemetry
             # (no cooldown is noted, so the next poll retries)
             return None
-        samples = [(o.plan, o.alloc, o.t_iter) for o in sub]
-        new = fit(profile, samples, env, x0=cur)   # warm start
+        return sub
+
+    def _publish(self, key: tuple, sub: list, new: FitParams,
+                 now: float) -> Refit:
+        """Version-bump one fitted result and release its retired state."""
+        profile = self._profiles[key]
+        cur = self._current[key]
         before = self._window_error(profile, cur, sub)
         after = self._window_error(profile, new, sub)
         self.detector.note_refit(key, now)

@@ -189,6 +189,32 @@ def profiling_samples(profile: ModelProfile, oracle: AnalyticOracle,
     return out
 
 
+def profiling_requests(profiles, oracle: AnalyticOracle,
+                       env: Env | None = None, max_gpus: int = 8):
+    """Profile each model type and package the fit inputs for ONE
+    ``repro.core.fitting.fit_batch`` call — the shared cold-start entry
+    point (``Simulator`` pre-fits every cache-missed model type of a
+    trace this way; ``benchmarks._artifacts`` pre-warms the Table-2
+    cache the same way, so cache keys/values stay result-identical).
+
+    Returns ``(requests, skipped)``: one ``FitRequest`` per profile with
+    enough feasible profiling samples, and ``(profile, samples)`` for
+    the rest (< 4 points — the project-wide fit floor; callers fall back
+    to default ``FitParams`` and surface the type as uncalibrated — the
+    collected samples ride along so no caller re-profiles)."""
+    from repro.core.fitting import FitRequest
+    env = env or oracle.env
+    requests, skipped = [], []
+    for profile in profiles:
+        samples = profiling_samples(profile, oracle, max_gpus=max_gpus)
+        if len(samples) >= 4:
+            requests.append(FitRequest(profile=profile,
+                                       samples=tuple(samples), env=env))
+        else:
+            skipped.append((profile, samples))
+    return requests, skipped
+
+
 class JaxMicroOracle:
     """Measures REAL wall-clock step times of reduced JAX models on this
     host, exposing the same .measure() interface at micro scale (dp=1 only;

@@ -262,18 +262,48 @@ def predict_titer(profile, plan, alloc, env, k) -> float:
 # Batched engine (vectorized twin of predict_parts)
 # ---------------------------------------------------------------------------
 
-def f_overlap_batch(k: float, tx: np.ndarray, ty: np.ndarray) -> np.ndarray:
+def _f_overlap_core(kk, tx: np.ndarray, ty: np.ndarray) -> np.ndarray:
+    """``f_overlap_batch`` without the input coercion / fp-error guard —
+    the fitting hot path calls this under one shared ``errstate``.  Uses
+    the one-exp form of the k-power log-sum-exp: with lo = max(lx, ly)
+    one exponent is exactly 0, so the sum is 1 + exp(-k·|lx-ly|)."""
+    lx, ly = np.log(tx), np.log(ty)
+    lo = np.maximum(lx, ly)
+    lse = np.exp(lo + np.log1p(np.exp(-kk * np.abs(lx - ly))) / kk)
+    return np.where(tx <= 0.0, ty, np.where(ty <= 0.0, tx, lse))
+
+
+def f_overlap_batch(k, tx: np.ndarray, ty: np.ndarray) -> np.ndarray:
     """Vectorized ``f_overlap``: same log-sum-exp in the k-power domain,
-    elementwise over broadcastable arrays."""
+    elementwise over broadcastable arrays.  ``k`` may itself be an array
+    (one exponent per candidate parameter vector) broadcastable against
+    ``tx``/``ty``."""
     tx = np.asarray(tx, float)
     ty = np.asarray(ty, float)
-    kk = max(float(k), 1.0)
+    kk = np.maximum(np.asarray(k, float), 1.0)
     with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
-        lx, ly = np.log(tx), np.log(ty)
-        lo = np.maximum(lx, ly)
-        lse = np.exp(lo + np.log(np.exp(kk * (lx - lo)) +
-                                 np.exp(kk * (ly - lo))) / kk)
-    return np.where(tx <= 0.0, ty, np.where(ty <= 0.0, tx, lse))
+        return _f_overlap_core(kk, tx, ty)
+
+
+def _param_fields(k):
+    """The seven model coefficients of ``k`` in evaluation-ready form.
+
+    ``FitParams`` → plain scalars (the classic broadcast).  A ``(K, 7)``
+    parameter matrix → seven ``(K, 1)`` columns, so every coefficient
+    broadcasts a candidate axis against flat ``(S,)`` sample columns and
+    one array pass evaluates K parameter vectors × S samples — the shape
+    the fitting engine steps whole simplex tensors through.  Matrix mode
+    therefore requires 1-D sample columns (not ``cols.expand()`` grids).
+    """
+    if isinstance(k, FitParams):
+        return (k.k_bwd, k.k_sync, k.k_opt, k.k_opt_off, k.k_off,
+                k.k_swap, k.k_const)
+    m = np.asarray(k, float)
+    if m.ndim == 1:
+        m = m[None, :]
+    if m.ndim != 2 or m.shape[1] != 7:
+        raise ValueError(f"parameter matrix must be (K, 7), got {m.shape}")
+    return tuple(m[:, i][:, None] for i in range(7))
 
 
 @dataclass
@@ -291,25 +321,44 @@ class BatchBreakdown:
     t_iter: np.ndarray
 
 
-def predict_parts_batch(profile: ModelProfile, cols: PlanColumns,
-                        alloc_gpus, alloc_cpus, env: Env, k: FitParams,
-                        per_node=None) -> BatchBreakdown:
-    """All T_* parts of Eq. 1 for a whole plan table × allocation grid.
+@dataclass(frozen=True)
+class TiterStatics:
+    """Everything in Eq. 1 that does NOT depend on the fittable 7-tuple,
+    precomputed once per (plan columns × allocation) sample set.
+
+    The fitting engine evaluates thousands of candidate parameter
+    vectors against one fixed sample set; splitting the prediction into
+    statics (computed once) + ``titer_from_statics`` (the ~10 array ops
+    that actually involve ``k``) keeps each optimizer step cheap."""
+    t_fwd: np.ndarray
+    a_eff: np.ndarray
+    gc_add: np.ndarray            # t_fwd where gc else 0 (bwd recompute)
+    t_comm_dp: np.ndarray
+    t_comm_tp: np.ndarray
+    t_comm_pp: np.ndarray
+    opt_scale: np.ndarray         # t_opt = k_opt * opt_scale (no offload)
+    opt_scale_off: np.ndarray     # t_opt = k_opt_off * opt_scale_off
+    t_off: np.ndarray
+    off: np.ndarray               # bool
+    infeas: np.ndarray            # bool
+
+
+def titer_statics(profile: ModelProfile, cols: PlanColumns,
+                  alloc_gpus, alloc_cpus, env: Env,
+                  per_node=None) -> TiterStatics:
+    """Precompute the k-independent parts of Eq. 1 for a sample set.
 
     ``cols`` holds plan columns; ``alloc_gpus``/``alloc_cpus`` (and
     optionally ``per_node`` — max GPUs of the allocation on one node) are
     arrays broadcastable against them.  Use ``cols.expand()`` with (G,)
     alloc vectors to get an (n_plans, G) grid, or flat same-length arrays
-    for per-sample evaluation (as ``fit`` does).  Semantics are pinned to
-    ``predict_parts`` by property tests (batch ≡ scalar to 1e-9).
+    for per-sample evaluation (as the fitting engine does).
     """
     b, s, h, l, P = profile.b, profile.s, profile.h, profile.l, profile.P
     d = cols.dp.astype(float)
     t = cols.tp.astype(float)
     p = cols.pp.astype(float)
     a = cols.ga.astype(float)                    # already ≥ 1
-    gcm = cols.gc
-    off = cols.offload
     alloc_gpus = np.asarray(alloc_gpus)
     alloc_cpus = np.asarray(alloc_cpus, float)
     if per_node is None:
@@ -328,9 +377,6 @@ def predict_parts_batch(profile: ModelProfile, cols: PlanColumns,
         t_fwd = np.where(pp_mode, t_fwd_pp, t_fwd_dp)
         a_eff = np.where(pp_mode, 1.0, a)
 
-        # --- T_bwd --------------------------------------------------------
-        t_bwd = k.k_bwd * t_fwd + np.where(gcm, t_fwd, 0.0)
-
         # --- T_comm -------------------------------------------------------
         bpp = 2.0
         V_dp = bpp * P * 2.0 * (d - 1) / np.maximum(d * t * p, 1.0)
@@ -345,33 +391,83 @@ def predict_parts_batch(profile: ModelProfile, cols: PlanColumns,
         B_pp = np.where(t * p <= per_node, env.B_intra, env.B_inter)
         t_comm_pp = np.where(p > 1, V_pp / B_pp, 0.0)
 
-        # --- T_opt / T_off ------------------------------------------------
+        # --- T_opt / T_off scales -----------------------------------------
         cpus_per_rank = np.maximum(alloc_cpus / np.maximum(d, 1.0), 1.0)
-        t_opt_off = k.k_opt_off * P / (d * cpus_per_rank)
         x = np.where((t > 1) | (p > 1), t * p,
                      np.where(cols.zero >= 1, d, 1.0))
-        t_opt = np.where(off, t_opt_off, k.k_opt * P / x)
+        off = cols.offload
         t_off = np.where(off, bpp * P / (d * env.B_pcie), 0.0)
 
-        # --- combine ------------------------------------------------------
-        sync = f_overlap_batch(k.k_sync, t_bwd, t_comm_dp)
-        t_cc = np.where(a_eff > 1,
-                        a_eff * t_fwd + (a_eff - 1) * t_bwd + sync,
-                        t_fwd + sync + t_comm_tp + t_comm_pp)
-        t_oo = np.where(off,
-                        f_overlap_batch(k.k_off, t_comm_dp, t_off) +
-                        f_overlap_batch(k.k_swap, t_opt, t_off),
+    return TiterStatics(
+        t_fwd=t_fwd, a_eff=a_eff,
+        gc_add=np.where(cols.gc, t_fwd, 0.0),
+        t_comm_dp=t_comm_dp, t_comm_tp=t_comm_tp, t_comm_pp=t_comm_pp,
+        opt_scale=P / x, opt_scale_off=P / (d * cpus_per_rank),
+        t_off=t_off, off=np.asarray(off, bool), infeas=infeas)
+
+
+def _combine_statics(st: TiterStatics, k):
+    """(t_bwd, t_opt, t_iter) from precomputed statics + one ``k``
+    (``FitParams`` or a (K, 7) matrix — see ``_param_fields``)."""
+    k_bwd, k_sync, k_opt, k_opt_off, k_off, k_swap, k_const = \
+        _param_fields(k)
+    with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+        t_bwd = k_bwd * st.t_fwd + st.gc_add
+        t_opt = np.where(st.off, k_opt_off * st.opt_scale_off,
+                         k_opt * st.opt_scale)
+        sync = _f_overlap_core(np.maximum(np.asarray(k_sync, float), 1.0),
+                               t_bwd, st.t_comm_dp)
+        t_cc = np.where(st.a_eff > 1,
+                        st.a_eff * st.t_fwd + (st.a_eff - 1) * t_bwd + sync,
+                        st.t_fwd + sync + st.t_comm_tp + st.t_comm_pp)
+        t_oo = np.where(st.off,
+                        _f_overlap_core(
+                            np.maximum(np.asarray(k_off, float), 1.0),
+                            st.t_comm_dp, st.t_off) +
+                        _f_overlap_core(
+                            np.maximum(np.asarray(k_swap, float), 1.0),
+                            t_opt, st.t_off),
                         t_opt)
-        t_iter = t_cc + t_oo + k.k_const
+        t_iter = t_cc + t_oo + k_const
+    return t_bwd, t_opt, t_iter
+
+
+def titer_from_statics(st: TiterStatics, k) -> np.ndarray:
+    """T_iter only (inf where infeasible) — the fitting hot path: with a
+    (K, 7) parameter matrix the result is (K, S), one row per candidate,
+    in ~10 array ops instead of the full statics recomputation."""
+    _, _, t_iter = _combine_statics(st, k)
+    return np.where(st.infeas, np.inf, t_iter)
+
+
+def predict_parts_batch(profile: ModelProfile, cols: PlanColumns,
+                        alloc_gpus, alloc_cpus, env: Env, k,
+                        per_node=None) -> BatchBreakdown:
+    """All T_* parts of Eq. 1 for a whole plan table × allocation grid.
+
+    ``k`` is a ``FitParams`` (classic scalar broadcast) or a ``(K, 7)``
+    parameter matrix — then sample columns must be flat 1-D and every
+    output field is ``(K, S)``: one full NumPy pass evaluates K candidate
+    parameter vectors × S samples (the shape the batched fitting engine
+    steps whole simplex tensors through).  Semantics are pinned to
+    ``predict_parts`` by property tests (batch ≡ scalar to 1e-9), and
+    matrix rows ≡ per-vector scalar passes in ``tests/test_fitting.py``.
+    """
+    st = titer_statics(profile, cols, alloc_gpus, alloc_cpus, env, per_node)
+    t_bwd, t_opt, t_iter = _combine_statics(st, k)
 
     def _mask(arr):
-        return np.where(infeas, 0.0, arr)
+        return np.where(st.infeas, 0.0, arr)
 
     return BatchBreakdown(
-        t_fwd=_mask(t_fwd), t_bwd=_mask(t_bwd),
-        t_comm_dp=_mask(t_comm_dp), t_comm_tp=_mask(t_comm_tp),
-        t_comm_pp=_mask(t_comm_pp), t_opt=_mask(t_opt), t_off=_mask(t_off),
-        t_iter=np.where(infeas, np.inf, t_iter))
+        t_fwd=_mask(np.broadcast_to(st.t_fwd, t_iter.shape)),
+        t_bwd=_mask(t_bwd),
+        t_comm_dp=_mask(np.broadcast_to(st.t_comm_dp, t_iter.shape)),
+        t_comm_tp=_mask(np.broadcast_to(st.t_comm_tp, t_iter.shape)),
+        t_comm_pp=_mask(np.broadcast_to(st.t_comm_pp, t_iter.shape)),
+        t_opt=_mask(t_opt),
+        t_off=_mask(np.broadcast_to(st.t_off, t_iter.shape)),
+        t_iter=np.where(st.infeas, np.inf, t_iter))
 
 
 def predict_titer_batch(profile, cols, alloc_gpus, alloc_cpus, env, k,
@@ -399,6 +495,19 @@ def predict_throughput(profile, plan, alloc, env, k) -> float:
 # Continuous model fitting (Sec 4.3)
 # ---------------------------------------------------------------------------
 
+def sample_arrays(samples, env: Env):
+    """Flatten a (plan, alloc, measured T_iter) sample list into batched
+    predictor inputs: (cols, alloc_gpus, alloc_cpus, per_node, true) —
+    the ONE place the fit loss, its scoring paths, and
+    ``prediction_error`` agree on how samples become columns."""
+    cols = PlanColumns.from_plans([pl for pl, _, _ in samples])
+    a_gpus = np.array([al.gpus for _, al, _ in samples])
+    a_cpus = np.array([al.cpus for _, al, _ in samples], float)
+    a_node = np.array([al.max_gpus_on_node(env) for _, al, _ in samples])
+    true = np.array([t for _, _, t in samples])
+    return cols, a_gpus, a_cpus, a_node, true
+
+
 _BOUNDS = [(1.0, 5.0),      # k_bwd
            (1.0, 64.0),     # k_sync
            (1e-13, 1e-8),   # k_opt
@@ -415,20 +524,36 @@ def rmsle(pred: np.ndarray, true: np.ndarray) -> float:
 
 
 def fit(profile: ModelProfile, samples: list[tuple[ExecutionPlan, Alloc, float]],
-        env: Env | None = None, x0: FitParams | None = None) -> FitParams:
+        env: Env | None = None, x0: FitParams | None = None,
+        engine: str = "batched", maxiter: int = 3000) -> FitParams:
     """Fit the 7-tuple to (plan, alloc, measured T_iter) samples by RMSLE.
 
     Paper: ≥7 points, ≥3 exercising ZeRO-Offload when that strategy is in
     the plan space; the model is refit online when prediction error exceeds
     a threshold — ``repro.calibration`` implements that loop: the
     simulator's telemetry feeds a ``DriftDetector``, and
-    ``CalibrationManager`` calls this function with ``x0=current`` for a
-    warm-started refit whose result is published through versioned
+    ``CalibrationManager`` batches every drifted model type at a telemetry
+    tick into one ``repro.core.fitting.fit_batch`` call (warm-started at
+    ``x0=current``) whose results are published through versioned
     curve-cache / scheduler-index invalidation.
+
+    ``engine="batched"`` (default) is that same vectorized multi-start
+    Nelder-Mead — all restarts stepped as one batched simplex tensor
+    through the (K, 7)-parameter-matrix predictors, with per-restart
+    convergence masking and an RMSLE-plateau early stop.
+    ``engine="scalar"`` keeps the serial scipy Nelder-Mead reference;
+    parity (batched window RMSLE ≤ scalar's within 1e-6) is pinned by
+    ``tests/test_fitting.py``.
     """
+    env = env or Env()
+    if engine == "batched":
+        from repro.core.fitting import FitRequest, fit_batch
+        return fit_batch([FitRequest(profile=profile, samples=tuple(samples),
+                                     env=env, x0=x0)], maxiter=maxiter)[0]
+    if engine != "scalar":
+        raise ValueError(f"unknown fit engine {engine!r}")
     from scipy.optimize import minimize
 
-    env = env or Env()
     x0 = (x0 or FitParams()).as_vector()
     lo = np.array([b[0] for b in _BOUNDS])
     hi = np.array([b[1] for b in _BOUNDS])
@@ -438,11 +563,7 @@ def fit(profile: ModelProfile, samples: list[tuple[ExecutionPlan, Alloc, float]]
 
     # vectorize the loss: flatten samples into plan columns + alloc columns
     # once, then each Nelder-Mead evaluation is a single batched pass
-    cols = PlanColumns.from_plans([pl for pl, _, _ in samples])
-    a_gpus = np.array([al.gpus for _, al, _ in samples])
-    a_cpus = np.array([al.cpus for _, al, _ in samples], float)
-    a_node = np.array([al.max_gpus_on_node(env) for _, al, _ in samples])
-    true = np.array([t for _, _, t in samples])
+    cols, a_gpus, a_cpus, a_node, true = sample_arrays(samples, env)
 
     def loss(z):
         k = unpack(z)
@@ -460,7 +581,7 @@ def fit(profile: ModelProfile, samples: list[tuple[ExecutionPlan, Alloc, float]]
         rng = np.random.default_rng(seed)
         start = z0 + rng.normal(0, 1.0, size=z0.shape) * (seed > 0)
         res = minimize(loss, start, method="Nelder-Mead",
-                       options={"maxiter": 3000, "fatol": 1e-7,
+                       options={"maxiter": maxiter, "fatol": 1e-7,
                                 "xatol": 1e-7})
         if res.fun < best_val:
             best, best_val = res.x, res.fun
@@ -470,13 +591,19 @@ def fit(profile: ModelProfile, samples: list[tuple[ExecutionPlan, Alloc, float]]
 def prediction_error(profile, k: FitParams,
                      samples: list[tuple[ExecutionPlan, Alloc, float]],
                      env: Env | None = None) -> tuple[float, float]:
-    """(avg, max) relative T_iter error — the paper's Table 2 metric."""
+    """(avg, max) relative T_iter error — the paper's Table 2 metric.
+
+    One batched predictor pass over the whole sample set (the old
+    per-sample ``predict_titer`` loop made the Table-2 benchmark path an
+    interpreter loop)."""
     env = env or Env()
-    errs = []
-    for pl, al, t_true in samples:
-        t_pred = predict_titer(profile, pl, al, env, k)
-        if math.isfinite(t_pred) and t_true > 0:
-            errs.append(abs(t_pred - t_true) / t_true)
-    if not errs:
+    if not samples:
         return float("nan"), float("nan")
+    cols, a_gpus, a_cpus, a_node, true = sample_arrays(samples, env)
+    pred = predict_titer_batch(profile, cols, a_gpus, a_cpus, env, k,
+                               per_node=a_node)
+    ok = np.isfinite(pred) & (true > 0)
+    if not ok.any():
+        return float("nan"), float("nan")
+    errs = np.abs(pred[ok] - true[ok]) / true[ok]
     return float(np.mean(errs)), float(np.max(errs))

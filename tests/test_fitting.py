@@ -1,0 +1,223 @@
+"""Batched multi-start fitting engine (ISSUE 5): parameter-matrix
+broadcasting, batched ≡ scalar fit parity, warm-start monotonicity, and
+the one-call refit batching the calibration manager relies on.
+
+The scipy Nelder-Mead path (``fit(engine="scalar")``) is the reference;
+the batched engine must land at a window RMSLE no worse than the
+scalar's within 1e-6 — it walks the same update rules from the same
+starts, so in practice the two agree to ~1e-8.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import paper_models
+from repro.core.fitting import FitRequest, FitStats, fit_batch
+from repro.core.oracle import AnalyticOracle, profiling_samples
+from repro.core.perfmodel import (Alloc, Env, FitParams, fit,
+                                  predict_parts_batch, predict_titer,
+                                  predict_titer_batch, prediction_error,
+                                  rmsle, sample_arrays)
+
+ENV = Env()
+
+
+def _sample_arrays(samples):
+    cols, a_gpus, a_cpus, a_node, _true = sample_arrays(samples, ENV)
+    return cols, a_gpus, a_cpus, a_node
+
+
+def window_rmsle_under(prof, samples, k) -> float:
+    """The fit objective re-evaluated under ``k`` (mirrors the engines'
+    shared loss: non-finite predictions drop out)."""
+    cols, a_gpus, a_cpus, a_node, true = sample_arrays(samples, ENV)
+    pred = predict_titer_batch(prof, cols, a_gpus, a_cpus, ENV, k,
+                               per_node=a_node)
+    ok = np.isfinite(pred)
+    return rmsle(pred[ok], true[ok])
+
+
+# --- (K, 7) parameter-matrix broadcasting ------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000),
+       model=st.sampled_from(["gpt2-1.5b", "llama2-7b", "roberta-355m"]))
+def test_param_matrix_rows_equal_scalar_passes(seed, model):
+    """A (K, 7) parameter matrix against flat sample columns ≡ K
+    independent scalar-FitParams passes, row for row, to 1e-9."""
+    prof = paper_models.profile(model)
+    samples = profiling_samples(prof, AnalyticOracle())
+    cols, a_gpus, a_cpus, a_node = _sample_arrays(samples)
+    rng = np.random.default_rng(seed)
+    lo = np.array([1.0, 1.0, 1e-13, 1e-12, 1.0, 1.0, 0.0])
+    hi = np.array([5.0, 64.0, 1e-8, 1e-7, 64.0, 64.0, 1.0])
+    kmat = lo + (hi - lo) * rng.random((5, 7))
+    got = predict_titer_batch(prof, cols, a_gpus, a_cpus, ENV, kmat,
+                              per_node=a_node)
+    assert got.shape == (5, len(samples))
+    for r in range(5):
+        ref = predict_titer_batch(prof, cols, a_gpus, a_cpus, ENV,
+                                  FitParams.from_vector(kmat[r]),
+                                  per_node=a_node)
+        np.testing.assert_allclose(got[r], ref, rtol=1e-9)
+
+
+def test_param_matrix_parts_match_and_validate():
+    prof = paper_models.profile("gpt2-1.5b")
+    samples = profiling_samples(prof, AnalyticOracle())
+    cols, a_gpus, a_cpus, a_node = _sample_arrays(samples)
+    k0 = FitParams()
+    parts = predict_parts_batch(prof, cols, a_gpus, a_cpus, ENV,
+                                k0.as_vector()[None, :], per_node=a_node)
+    ref = predict_parts_batch(prof, cols, a_gpus, a_cpus, ENV, k0,
+                              per_node=a_node)
+    for name in ("t_fwd", "t_bwd", "t_comm_dp", "t_comm_tp", "t_comm_pp",
+                 "t_opt", "t_off", "t_iter"):
+        np.testing.assert_allclose(getattr(parts, name)[0],
+                                   getattr(ref, name), rtol=1e-9)
+    with pytest.raises(ValueError):
+        predict_titer_batch(prof, cols, a_gpus, a_cpus, ENV,
+                            np.zeros((3, 5)))
+
+
+# --- batched ≡ scalar fit parity (Table-2 profiles) --------------------------
+
+@pytest.mark.parametrize("model", ["gpt2-1.5b", "roberta-355m", "t5-1.2b",
+                                   "llama2-7b"])
+def test_batched_fit_parity_on_table2_profiles(model):
+    """Cold fits on the paper's profiling sets: the batched engine's
+    window RMSLE must be no worse than the scipy reference's + 1e-6."""
+    prof = paper_models.profile(model)
+    samples = profiling_samples(prof, AnalyticOracle())
+    k_scalar = fit(prof, samples, ENV, engine="scalar")
+    k_batched = fit(prof, samples, ENV, engine="batched")
+    r_scalar = window_rmsle_under(prof, samples, k_scalar)
+    r_batched = window_rmsle_under(prof, samples, k_batched)
+    assert r_batched <= r_scalar + 1e-6, (r_batched, r_scalar)
+
+
+def test_fit_rejects_unknown_engine():
+    prof = paper_models.profile("gpt2-1.5b")
+    samples = profiling_samples(prof, AnalyticOracle())
+    with pytest.raises(ValueError, match="engine"):
+        fit(prof, samples, ENV, engine="banana")
+
+
+# --- random calibration windows (property) -----------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       now_h=st.floats(0.5, 24.0),
+       model=st.sampled_from(["gpt2-1.5b", "roberta-355m", "llama2-7b"]))
+def test_random_window_batched_never_worse_and_warm_monotone(seed, now_h,
+                                                             model):
+    """Random drifted telemetry windows: (a) warm-start monotonicity —
+    the batched result's window RMSLE never exceeds the incumbent's;
+    (b) the batched engine at full budget is never worse (within 1e-6)
+    than a truncated scalar reference run."""
+    prof = paper_models.profile(model)
+    oracle = AnalyticOracle(drifting=True, drift_tau=7200.0)
+    base = profiling_samples(prof, AnalyticOracle())
+    rng = np.random.default_rng(seed)
+    now = now_h * 3600.0
+    window = [(pl, al, oracle.measure(prof, pl, al, seed=int(s), now=now))
+              for s in rng.integers(0, 100, size=rng.integers(8, 24))
+              for (pl, al, _) in [base[int(rng.integers(0, len(base)))]]]
+    window = [(pl, al, t) for pl, al, t in window if math.isfinite(t)]
+    if len(window) < 4:
+        return
+    x0 = fit(prof, base, ENV)                 # incumbent: the t=0 fit
+    got = fit_batch([FitRequest(profile=prof, samples=tuple(window),
+                                env=ENV, x0=x0)])[0]
+    r_got = window_rmsle_under(prof, window, got)
+    assert r_got <= window_rmsle_under(prof, window, x0) + 1e-9
+    k_scalar = fit(prof, window, ENV, x0=x0, engine="scalar", maxiter=400)
+    assert r_got <= window_rmsle_under(prof, window, k_scalar) + 1e-6
+
+
+# --- batching must not change results ----------------------------------------
+
+def test_fit_batch_results_independent_of_batching():
+    """One multi-request call ≡ per-request calls, exactly: each fit's
+    simplices only ever see their own samples."""
+    oracle = AnalyticOracle()
+    reqs = []
+    for model in ("gpt2-1.5b", "roberta-355m", "t5-1.2b"):
+        prof = paper_models.profile(model)
+        reqs.append(FitRequest(profile=prof,
+                               samples=tuple(profiling_samples(prof,
+                                                               oracle)),
+                               env=ENV))
+    together = fit_batch(reqs)
+    alone = [fit_batch([r])[0] for r in reqs]
+    for a, b in zip(together, alone):
+        assert np.array_equal(a.as_vector(), b.as_vector())
+
+
+def test_fit_batch_stats_and_empty():
+    assert fit_batch([]) == []
+    prof = paper_models.profile("gpt2-1.5b")
+    samples = tuple(profiling_samples(prof, AnalyticOracle()))
+    stats = FitStats()
+    fit_batch([FitRequest(profile=prof, samples=samples, env=ENV)],
+              stats=stats)
+    assert stats.n_calls == 1 and stats.n_fits == 1
+    assert stats.iters > 0 and stats.evals > 0 and stats.seconds > 0
+
+
+# --- vectorized prediction_error ---------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(model=st.sampled_from(["gpt2-1.5b", "roberta-355m", "llama2-7b"]),
+       seed=st.integers(0, 100))
+def test_prediction_error_matches_scalar_loop(model, seed):
+    prof = paper_models.profile(model)
+    oracle = AnalyticOracle()
+    samples = [(pl, al, oracle.measure(prof, pl, al, seed=seed))
+               for pl, al, _ in profiling_samples(prof, oracle)]
+    k = FitParams()
+    avg, mx = prediction_error(prof, k, samples, ENV)
+    errs = []
+    for pl, al, t_true in samples:
+        t_pred = predict_titer(prof, pl, al, ENV, k)
+        if math.isfinite(t_pred) and t_true > 0:
+            errs.append(abs(t_pred - t_true) / t_true)
+    assert avg == pytest.approx(float(np.mean(errs)), rel=1e-12)
+    assert mx == pytest.approx(float(np.max(errs)), rel=1e-12)
+
+
+def test_prediction_error_empty_and_all_infeasible():
+    prof = paper_models.profile("gpt2-1.5b")
+    avg, mx = prediction_error(prof, FitParams(), [], ENV)
+    assert math.isnan(avg) and math.isnan(mx)
+    bad = [(pl, Alloc(0, 0), 1.0)
+           for pl, _, _ in profiling_samples(prof, AnalyticOracle())]
+    avg, mx = prediction_error(prof, FitParams(), bad, ENV)
+    assert math.isnan(avg) and math.isnan(mx)
+
+
+# --- the manager fits all drifted types in ONE batched call ------------------
+
+def test_manager_batches_concurrent_refits_into_one_call():
+    from repro.calibration import (CalibrationManager, DriftConfig,
+                                   DriftDetector)
+    cal = CalibrationManager(detector=DriftDetector(DriftConfig(
+        threshold=0.05, min_observations=4, cooldown_s=10.0)))
+    profs = [paper_models.profile(m) for m in ("gpt2-1.5b", "roberta-355m")]
+    oracle = AnalyticOracle()
+    for prof in profs:
+        cur = FitParams()
+        cal.ensure(prof, cur)
+        # drive both types' windows over threshold before one poll
+        for i, (pl, al, t) in enumerate(profiling_samples(prof, oracle)):
+            cal.observe(prof, cur, pl, al, ENV, t * 2.5, now=float(i))
+    refits = cal.poll(now=100.0)
+    assert len(refits) == 2                   # both types refit...
+    assert cal.fit_stats.n_calls == 1         # ...from one batched call
+    assert cal.fit_stats.n_fits == 2
+    for r in refits:
+        assert r.rmsle_after <= r.rmsle_before + 1e-9
