@@ -20,6 +20,7 @@ import sys
 import time
 
 from benchmarks import _artifacts
+from repro.analysis import sanitize_enabled
 from repro.core import baselines, trace
 from repro.core.cluster import Cluster, JobState, hetero_cluster
 from repro.core.simulator import Simulator
@@ -110,7 +111,10 @@ def run(smoke: bool = False) -> list[dict]:
             [scale_row(cache, smoke=True)]
     else:
         rows = parity_rows(cache) + [scale_row(cache)]
-    _artifacts.write_bench_json("sim_scale", rows, extra={"smoke": smoke})
+    # timings taken under REPRO_SANITIZE=1 are not comparable to baseline
+    # runs — stamp the mode into the artifact so comparisons can filter
+    _artifacts.write_bench_json("sim_scale", rows, extra={
+        "smoke": smoke, "sanitize": sanitize_enabled()})
     return rows
 
 

@@ -1,0 +1,17 @@
+"""House lint rules for the incremental scheduling core."""
+
+from repro.analysis.rules.base import (LintModule, Rule,  # noqa: F401
+                                       Violation)
+from repro.analysis.rules.determinism import DeterminismRule
+from repro.analysis.rules.dirty_coverage import DirtyCoverageRule
+from repro.analysis.rules.memo_scoping import MemoScopingRule
+from repro.analysis.rules.rollback import RollbackRule
+from repro.analysis.rules.shape_contracts import ShapeContractRule
+
+ALL_RULES = [
+    MemoScopingRule,
+    RollbackRule,
+    DirtyCoverageRule,
+    DeterminismRule,
+    ShapeContractRule,
+]

@@ -1,0 +1,131 @@
+"""Rule ``nondeterminism``: decision paths must be replayable.
+
+Scheduling decisions must be a pure function of (jobs, cluster, fitted
+params, config) — the incremental≡full parity tests and the seeded
+simulation sweeps rely on it.  Within ``core/`` and ``calibration/``
+this rule flags:
+
+* wall-clock reads: ``time.time``/``time.monotonic``, ``datetime.now``/
+  ``utcnow``/``today`` (``time.perf_counter`` is fine — it only feeds
+  diagnostic timings, never decisions);
+* unseeded randomness: the legacy ``np.random.*`` global generator,
+  ``default_rng()`` with no seed, stdlib ``random.*`` module calls,
+  ``os.urandom``, ``uuid.uuid4``;
+* dict-order-dependent iteration over ``id()``-keyed containers:
+  ``id()`` values vary run to run, so bare iteration over such a dict /
+  set feeds allocator addresses into decision order unless the loop is
+  order-insensitive (waive with the reason) or wrapped in ``sorted()``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.rules.base import LintModule, Rule, Violation
+
+SCOPES = ("core/", "calibration/")
+
+_WALLCLOCK = {("time", "time"), ("time", "monotonic"),
+              ("time", "monotonic_ns"), ("time", "time_ns")}
+_DATETIME_ATTRS = {"now", "utcnow", "today"}
+_RANDOM_MODULES = {"random"}
+
+
+def _dotted(expr: ast.AST) -> list[str]:
+    parts: list[str] = []
+    while isinstance(expr, ast.Attribute):
+        parts.append(expr.attr)
+        expr = expr.value
+    if isinstance(expr, ast.Name):
+        parts.append(expr.id)
+    return parts[::-1]
+
+
+class DeterminismRule(Rule):
+    rule_id = "nondeterminism"
+    description = ("no wall-clock, unseeded RNG, or id()-ordered "
+                   "iteration on decision paths")
+
+    def check(self, module: LintModule) -> list[Violation]:
+        if not any(s in module.relpath for s in SCOPES):
+            return []
+        out: list[Violation] = []
+        ana = module.id_analysis()
+        direct_attrs = ana.direct_attr_containers
+        direct_names = {name for _, name in ana.direct_local_containers}
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Call):
+                v = self._check_call(module, node)
+                if v:
+                    out.append(v)
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                v = self._check_iter(module, node.iter, direct_attrs,
+                                     direct_names)
+                if v:
+                    out.append(v)
+            elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                   ast.DictComp, ast.GeneratorExp)):
+                for gen in node.generators:
+                    v = self._check_iter(module, gen.iter, direct_attrs,
+                                         direct_names)
+                    if v:
+                        out.append(v)
+        return out
+
+    def _check_call(self, module: LintModule,
+                    node: ast.Call) -> Violation | None:
+        path = _dotted(node.func)
+        if not path:
+            return None
+        dotted = ".".join(path)
+        line = node.lineno
+        if tuple(path[-2:]) in _WALLCLOCK and path[0] != "self":
+            return Violation(module.relpath, line, self.rule_id,
+                             f"wall-clock read {dotted}() on a decision "
+                             f"path (perf_counter is fine for timings)")
+        if len(path) >= 2 and path[-1] in _DATETIME_ATTRS \
+                and "datetime" in path[:-1]:
+            return Violation(module.relpath, line, self.rule_id,
+                             f"wall-clock read {dotted}()")
+        if path[-1] == "default_rng":
+            if not node.args and not node.keywords:
+                return Violation(module.relpath, line, self.rule_id,
+                                 "default_rng() without a seed is entropy-"
+                                 "seeded; pass an explicit seed")
+            return None
+        if len(path) >= 3 and path[0] in ("np", "numpy") \
+                and path[1] == "random":
+            return Violation(module.relpath, line, self.rule_id,
+                             f"legacy global-state RNG {dotted}(); use a "
+                             f"seeded np.random.default_rng instead")
+        if len(path) == 2 and path[0] in _RANDOM_MODULES:
+            return Violation(module.relpath, line, self.rule_id,
+                             f"stdlib global RNG {dotted}()")
+        if dotted in ("os.urandom", "uuid.uuid4", "uuid.uuid1"):
+            return Violation(module.relpath, line, self.rule_id,
+                             f"entropy source {dotted}()")
+        return None
+
+    def _check_iter(self, module: LintModule, it: ast.AST,
+                    direct_attrs: set, direct_names: set
+                    ) -> Violation | None:
+        expr = it
+        # foo.items()/.values()/.keys() -> look at foo
+        if isinstance(expr, ast.Call) and \
+                isinstance(expr.func, ast.Attribute) and \
+                expr.func.attr in ("items", "values", "keys"):
+            expr = expr.func.value
+        name = None
+        if isinstance(expr, ast.Attribute):
+            if expr.attr in direct_attrs:
+                name = expr.attr
+        elif isinstance(expr, ast.Name):
+            if expr.id in direct_names:
+                name = expr.id
+        if name is None:
+            return None
+        return Violation(
+            module.relpath, it.lineno, self.rule_id,
+            f"iteration over id()-keyed container '{name}' is allocator-"
+            f"address ordered; wrap in sorted() or waive if the loop is "
+            f"order-insensitive")

@@ -34,6 +34,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.analysis import sanitize_enabled
 from repro.calibration.drift import DriftDetector, window_rmsle
 from repro.calibration.store import Observation, ObservationStore
 from repro.core.fitting import FitRequest, FitStats, fit_batch
@@ -90,6 +91,10 @@ class CalibrationManager:
         # accumulated fitting-engine cost across all refits (benches
         # report this separately from simulation wall-clock)
         self.fit_stats = FitStats()
+        self._san = None
+        if sanitize_enabled():
+            from repro.analysis.sanitizer import SchedSanitizer
+            self._san = SchedSanitizer()
 
     # ------------------------------------------------------------------
     def ensure(self, profile: ModelProfile, params: FitParams,
@@ -165,8 +170,11 @@ class CalibrationManager:
             for key, sub in pending]
         fitted = fit_batch(requests, n_restarts=self.refit_restarts,
                            stats=self.fit_stats)
-        return [self._publish(key, sub, new, now)
-                for (key, sub), new in zip(pending, fitted)]
+        refits = [self._publish(key, sub, new, now)
+                  for (key, sub), new in zip(pending, fitted)]
+        if self._san is not None:
+            self._san.check_manager(self)
+        return refits
 
     @staticmethod
     def _refit_window(win) -> list | None:

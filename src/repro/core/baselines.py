@@ -78,6 +78,10 @@ class _FixedPlanScheduler(RubickScheduler):
                                    reallocate_resources=False),
                          quotas)
         self._gang_failed: set[tuple] = set()
+        # gang signatures embed id(profile)/id(fitted): pin the referents
+        # for as long as the signature is remembered, or a recycled
+        # address could alias a different model onto a memoized failure
+        self._gang_pins: dict[tuple, tuple] = {}
         self._gang_cluster: weakref.ref | None = None
 
     # -- incremental machinery -----------------------------------------
@@ -93,9 +97,11 @@ class _FixedPlanScheduler(RubickScheduler):
         if self.cfg.pass_engine != "incremental" or events is None \
                 or prev is not cluster:
             self._gang_failed = set()
+            self._gang_pins = {}
             self._gang_cluster = weakref.ref(cluster)
         elif events.completed:
             self._gang_failed.clear()
+            self._gang_pins.clear()
         elif events.refit:
             # gang signatures embed id(fitted): refit jobs re-key (and
             # re-walk) automatically, but the retired ids must not linger
@@ -103,7 +109,21 @@ class _FixedPlanScheduler(RubickScheduler):
             stale = {id(old) for _, old in events.refit}
             self._gang_failed = {s for s in self._gang_failed
                                  if s[1] not in stale}
+            self._gang_pins = {s: p for s, p in self._gang_pins.items()
+                               if s in self._gang_failed}
         return self._gang_failed
+
+    def _gang_fail(self, failed: set, sig: tuple, js: JobState) -> None:
+        """Memoize a failed gang placement AND pin the signature's
+        referents (the memo may outlive the job under the incremental
+        engine)."""
+        failed.add(sig)
+        self._gang_pins[sig] = (js.job.profile, js.fitted)
+
+    def _gang_wake(self, failed: set) -> None:
+        """Cluster state changed: every memoized failure may now place."""
+        failed.clear()
+        self._gang_pins.clear()
 
     @staticmethod
     def _gang_sig(js: JobState) -> tuple:
@@ -122,6 +142,8 @@ class _FixedPlanScheduler(RubickScheduler):
         if events is not None and events.refit:
             self._purge_refit_memos(events.refit)
         active = [j for j in jobs if j.status != "done"]
+        if self._san is not None:
+            self._san.begin_pass(active, cluster)
         for js in active:
             self._ensure_min_res(js, cluster)
         used = used_per_node([j for j in active if j.status == "running"])
@@ -136,9 +158,11 @@ class _FixedPlanScheduler(RubickScheduler):
                 continue
             if self._gang_place(js, active, cluster, now, used):
                 self._fold(js.placement, used)
-                failed.clear()
+                self._gang_wake(failed)
             else:
-                failed.add(sig)
+                self._gang_fail(failed, sig, js)
+        if self._san is not None:
+            self._san.end_pass(active, cluster, None, self)
 
     def _gang_place(self, js: JobState, active, cluster, now,
                     used=None) -> bool:
@@ -241,6 +265,8 @@ class AntManLike(_FixedPlanScheduler):
         if events is not None and events.refit:
             self._purge_refit_memos(events.refit)
         active = [j for j in jobs if j.status != "done"]
+        if self._san is not None:
+            self._san.begin_pass(active, cluster)
         for js in active:
             self._ensure_min_res(js, cluster)
         used = used_per_node([j for j in active if j.status == "running"])
@@ -255,41 +281,13 @@ class AntManLike(_FixedPlanScheduler):
                 continue
             if self._gang_place(js, active, cluster, now, used):
                 self._fold(js.placement, used)
-                failed.clear()
+                self._gang_wake(failed)
                 continue
-            # preempt best-effort jobs to honor the resource guarantee
-            be = [j for j in active if j.status == "running"
-                  and not j.job.guaranteed]
-            preempted: list[tuple] = []
-            placed = False
-            for victim in be:
-                preempted.append((victim, dict(victim.placement),
-                                  victim.plan, victim.alloc,
-                                  victim.n_reconfig))
-                self._fold(victim.placement, used, sign=-1)
-                victim.status = "queued"
-                victim.placement = {}
-                victim.plan = None
-                victim.alloc = None
-                victim.n_reconfig += 1
-                if self._gang_place(js, active, cluster, now, used):
-                    placed = True
-                    break
-            if placed:
+            if self._try_preempt(js, active, cluster, now, used):
                 self._fold(js.placement, used)
-                failed.clear()
+                self._gang_wake(failed)
             else:
-                # bugfix: evicting every best-effort job and STILL not
-                # placing the guaranteed one left all victims evicted
-                # for zero gain — roll the useless preemptions back
-                for victim, placement, plan, alloc, n_rcfg in preempted:
-                    victim.status = "running"
-                    victim.placement = placement
-                    victim.plan = plan
-                    victim.alloc = alloc
-                    victim.n_reconfig = n_rcfg
-                    self._fold(placement, used)
-                failed.add(sig)
+                self._gang_fail(failed, sig, js)
         queued_be = sorted([j for j in active if j.status == "queued"
                             and not j.job.guaranteed],
                            key=lambda j: j.job.submit)
@@ -299,9 +297,41 @@ class AntManLike(_FixedPlanScheduler):
                 continue
             if self._gang_place(js, active, cluster, now, used):
                 self._fold(js.placement, used)
-                failed.clear()
+                self._gang_wake(failed)
             else:
-                failed.add(sig)
+                self._gang_fail(failed, sig, js)
+        if self._san is not None:
+            self._san.end_pass(active, cluster, None, self)
+
+    def _try_preempt(self, js, active, cluster, now, used) -> bool:
+        """Preempt best-effort jobs one at a time until the guaranteed
+        job places (honoring its exact resource guarantee).  Returns
+        True when placed; on failure every eviction is rolled back —
+        bugfix: evicting every best-effort job and STILL not placing the
+        guaranteed one left all victims evicted for zero gain."""
+        be = [j for j in active if j.status == "running"
+              and not j.job.guaranteed]
+        preempted: list[tuple] = []
+        for victim in be:
+            preempted.append((victim, dict(victim.placement),
+                              victim.plan, victim.alloc,
+                              victim.n_reconfig))
+            self._fold(victim.placement, used, sign=-1)
+            victim.status = "queued"
+            victim.placement = {}
+            victim.plan = None
+            victim.alloc = None
+            victim.n_reconfig += 1
+            if self._gang_place(js, active, cluster, now, used):
+                return True
+        for victim, placement, plan, alloc, n_rcfg in preempted:
+            victim.status = "running"
+            victim.placement = placement
+            victim.plan = plan
+            victim.alloc = alloc
+            victim.n_reconfig = n_rcfg
+            self._fold(placement, used)
+        return False
 
 
 ALL = {

@@ -100,7 +100,12 @@ class _FitData:
         """Window RMSLE per z-space row — one batched predictor pass
         evaluates all rows × all samples (matches the scalar engine's
         loss: non-finite predictions drop out per row; 1e6 when a row
-        has no finite prediction at all)."""
+        has no finite prediction at all).
+
+        Shapes:
+            z_rows: (R, 7) sigmoid-space candidate rows
+            returns: (R,) RMSLE per row over this fit's samples
+        """
         pred = titer_from_statics(self.statics, _from_z(z_rows))
         ok = np.isfinite(pred)
         with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
@@ -146,6 +151,19 @@ def fit_batch(requests: list[FitRequest], *, n_restarts: int = 3,
     saves the bulk of warm-refit wall-clock (the warm restart wins
     early, the cold restarts would otherwise grind for hundreds of
     iterations).
+
+    Shapes:
+        requests: length-F list of FitRequest
+        n_restarts: scalar R (simplices per fit)
+        maxiter: scalar iteration cap
+        fatol: scalar function-value convergence tolerance
+        xatol: scalar simplex-spread convergence tolerance
+        plateau_iters: scalar plateau window
+        plateau_tol: scalar plateau improvement threshold
+        dominated_margin: scalar RMSLE gap for domination
+        dominated_after: scalar stuck-iteration threshold
+        stats: optional FitStats accumulator (mutated in place)
+        returns: length-F list of FitParams, one per request in order
     """
     if not requests:
         return []

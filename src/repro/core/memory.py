@@ -102,7 +102,17 @@ def estimate_batch(profile: ModelProfile, cols: PlanColumns,
                    alloc_gpus, alloc_cpus, env: Env | None = None,
                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """(gpu_bytes, host_bytes, cpu_needed) arrays — elementwise identical to
-    ``estimate`` over broadcastable plan/alloc columns (pinned by tests)."""
+    ``estimate`` over broadcastable plan/alloc columns (pinned by tests).
+
+    Shapes:
+        profile: (model constants, not an array)
+        cols: (S,) flat or (n_plans, 1) expanded plan columns
+        alloc_gpus: (S,) or (G,) GPU counts, broadcastable vs cols
+        alloc_cpus: (S,) or (G,) CPU counts, broadcastable vs cols
+        env: (hardware constants, not an array)
+        returns: (gpu_bytes, host_bytes, cpu_needed), each
+            broadcast(cols, alloc)
+    """
     env = env or Env()
     P = profile.P
     d = cols.dp.astype(float)

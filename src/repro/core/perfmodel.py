@@ -277,7 +277,14 @@ def f_overlap_batch(k, tx: np.ndarray, ty: np.ndarray) -> np.ndarray:
     """Vectorized ``f_overlap``: same log-sum-exp in the k-power domain,
     elementwise over broadcastable arrays.  ``k`` may itself be an array
     (one exponent per candidate parameter vector) broadcastable against
-    ``tx``/``ty``."""
+    ``tx``/``ty``.
+
+    Shapes:
+        k: scalar or (K, 1) overlap exponent(s), broadcastable vs tx/ty
+        tx: (S,) or (K, S) first time component
+        ty: (S,) or (K, S) second time component
+        returns: broadcast(k, tx, ty) elementwise overlap
+    """
     tx = np.asarray(tx, float)
     ty = np.asarray(ty, float)
     kk = np.maximum(np.asarray(k, float), 1.0)
@@ -353,6 +360,15 @@ def titer_statics(profile: ModelProfile, cols: PlanColumns,
     arrays broadcastable against them.  Use ``cols.expand()`` with (G,)
     alloc vectors to get an (n_plans, G) grid, or flat same-length arrays
     for per-sample evaluation (as the fitting engine does).
+
+    Shapes:
+        profile: (model constants, not an array)
+        cols: (S,) flat or (n_plans, 1) expanded plan columns
+        alloc_gpus: (S,) or (G,) GPU counts, broadcastable vs cols
+        alloc_cpus: (S,) or (G,) CPU counts, broadcastable vs cols
+        env: (hardware constants, not an array)
+        per_node: (S,)/(G,) max GPUs on one node, or None to derive
+        returns: TiterStatics of fields broadcast(cols, alloc)
     """
     b, s, h, l, P = profile.b, profile.s, profile.h, profile.l, profile.P
     d = cols.dp.astype(float)
@@ -435,7 +451,13 @@ def _combine_statics(st: TiterStatics, k):
 def titer_from_statics(st: TiterStatics, k) -> np.ndarray:
     """T_iter only (inf where infeasible) — the fitting hot path: with a
     (K, 7) parameter matrix the result is (K, S), one row per candidate,
-    in ~10 array ops instead of the full statics recomputation."""
+    in ~10 array ops instead of the full statics recomputation.
+
+    Shapes:
+        st: TiterStatics of (S,) sample columns
+        k: FitParams or (K, 7) candidate parameter matrix
+        returns: (S,) for FitParams, (K, S) for a parameter matrix
+    """
     _, _, t_iter = _combine_statics(st, k)
     return np.where(st.infeas, np.inf, t_iter)
 
@@ -452,6 +474,17 @@ def predict_parts_batch(profile: ModelProfile, cols: PlanColumns,
     steps whole simplex tensors through).  Semantics are pinned to
     ``predict_parts`` by property tests (batch ≡ scalar to 1e-9), and
     matrix rows ≡ per-vector scalar passes in ``tests/test_fitting.py``.
+
+    Shapes:
+        profile: (model constants, not an array)
+        cols: (S,) flat or (n_plans, 1) expanded plan columns
+        alloc_gpus: (S,) or (G,) GPU counts, broadcastable vs cols
+        alloc_cpus: (S,) or (G,) CPU counts, broadcastable vs cols
+        env: (hardware constants, not an array)
+        k: FitParams or (K, 7) candidate parameter matrix
+        per_node: (S,)/(G,) max GPUs on one node, or None to derive
+        returns: BatchBreakdown fields broadcast(cols, alloc) for
+            FitParams, (K, S) for a parameter matrix
     """
     st = titer_statics(profile, cols, alloc_gpus, alloc_cpus, env, per_node)
     t_bwd, t_opt, t_iter = _combine_statics(st, k)
@@ -472,13 +505,38 @@ def predict_parts_batch(profile: ModelProfile, cols: PlanColumns,
 
 def predict_titer_batch(profile, cols, alloc_gpus, alloc_cpus, env, k,
                         per_node=None) -> np.ndarray:
+    """T_iter per entry (inf where infeasible).
+
+    Shapes:
+        profile: (model constants, not an array)
+        cols: (S,) flat or (n_plans, 1) expanded plan columns
+        alloc_gpus: (S,) or (G,) GPU counts, broadcastable vs cols
+        alloc_cpus: (S,) or (G,) CPU counts, broadcastable vs cols
+        env: (hardware constants, not an array)
+        k: FitParams or (K, 7) candidate parameter matrix
+        per_node: (S,)/(G,) max GPUs on one node, or None to derive
+        returns: broadcast(cols, alloc) for FitParams, (K, S) for a
+            parameter matrix
+    """
     return predict_parts_batch(profile, cols, alloc_gpus, alloc_cpus, env, k,
                                per_node).t_iter
 
 
 def predict_throughput_batch(profile, cols, alloc_gpus, alloc_cpus, env, k,
                              per_node=None) -> np.ndarray:
-    """Samples/sec per entry; 0 where infeasible (matching scalar)."""
+    """Samples/sec per entry; 0 where infeasible (matching scalar).
+
+    Shapes:
+        profile: (model constants, not an array)
+        cols: (S,) flat or (n_plans, 1) expanded plan columns
+        alloc_gpus: (S,) or (G,) GPU counts, broadcastable vs cols
+        alloc_cpus: (S,) or (G,) CPU counts, broadcastable vs cols
+        env: (hardware constants, not an array)
+        k: FitParams or (K, 7) candidate parameter matrix
+        per_node: (S,)/(G,) max GPUs on one node, or None to derive
+        returns: broadcast(cols, alloc) for FitParams, (K, S) for a
+            parameter matrix
+    """
     t = predict_titer_batch(profile, cols, alloc_gpus, alloc_cpus, env, k,
                             per_node)
     ok = np.isfinite(t) & (t > 0)
@@ -499,7 +557,14 @@ def sample_arrays(samples, env: Env):
     """Flatten a (plan, alloc, measured T_iter) sample list into batched
     predictor inputs: (cols, alloc_gpus, alloc_cpus, per_node, true) —
     the ONE place the fit loss, its scoring paths, and
-    ``prediction_error`` agree on how samples become columns."""
+    ``prediction_error`` agree on how samples become columns.
+
+    Shapes:
+        samples: length-S list of (plan, alloc, t_iter) tuples
+        env: (hardware constants, not an array)
+        returns: (cols (S,), alloc_gpus (S,), alloc_cpus (S,),
+            per_node (S,), true (S,))
+    """
     cols = PlanColumns.from_plans([pl for pl, _, _ in samples])
     a_gpus = np.array([al.gpus for _, al, _ in samples])
     a_cpus = np.array([al.cpus for _, al, _ in samples], float)
@@ -566,6 +631,10 @@ def fit(profile: ModelProfile, samples: list[tuple[ExecutionPlan, Alloc, float]]
     cols, a_gpus, a_cpus, a_node, true = sample_arrays(samples, env)
 
     def loss(z):
+        """Shapes:
+            z: (7,) sigmoid-space parameter vector
+            returns: scalar RMSLE over the feasible samples
+        """
         k = unpack(z)
         pred = predict_titer_batch(profile, cols, a_gpus, a_cpus, env, k,
                                    per_node=a_node)

@@ -48,6 +48,7 @@ import math
 import weakref
 from dataclasses import dataclass
 
+from repro.analysis import sanitize_enabled
 from repro.core import memory
 from repro.core.cluster import (Cluster, JobState, Placement, SchedEvents,
                                 used_per_node)
@@ -75,6 +76,10 @@ class SchedulerConfig:
     # scheduling-pass engine: "incremental" (index-driven, default) or
     # "full" (the original full-pass reference)
     pass_engine: str = "incremental"
+    # runtime cross-checking of the incremental indexes against recomputed
+    # ground truth (repro.analysis.sanitizer); also enabled by the
+    # REPRO_SANITIZE environment variable
+    sanitize: bool = False
 
 
 def _walk_sig(js: JobState) -> tuple:
@@ -108,6 +113,12 @@ class _PassCtx:
         # one set lookup in the pass loop.
         self.parked_running: set[int] = set()      # id(js)
         self.parked_sigs: set[tuple] = set()       # queued-job signatures
+        # signature pin store: parked signatures embed id(profile) and
+        # id(fitted); the referents must stay alive while the signature
+        # is remembered, or a recycled address could alias a different
+        # model's walk outcome onto a fresh job (the history-pinning bug,
+        # generalized — also what makes the wake tokens safe to hold)
+        self.parked_pins: dict[tuple, tuple] = {}  # sig -> (profile, fitted)
         self.gate_wake: dict[int, float] = {}      # id(js) -> sim time
         # token sets (not lists): re-parking after a partial wake
         # re-subscribes the same token, and sets keep that idempotent
@@ -217,9 +228,8 @@ class _PassCtx:
         tenant's quota subscribers (a refit moves minRes, which moves
         reservations).  The time-based reconfiguration gate is fitted-
         independent, so ``gate_wake`` survives."""
-        stale = set()
-        for js, old in refits:
-            stale.add(id(old))
+        stale = {id(old) for _, old in refits}
+        for js, _old in refits:
             jid = id(js)
             if jid not in self.members:
                 continue           # arrived this very batch: registration
@@ -235,6 +245,8 @@ class _PassCtx:
         # every job of the refit model type must walk again
         self.parked_sigs = {s for s in self.parked_sigs
                             if s[1] not in stale}
+        self.parked_pins = {s: pin for s, pin in self.parked_pins.items()
+                            if s in self.parked_sigs}
 
     def prune(self, cluster: Cluster) -> None:
         """Compact soft resident lists that accumulated stale entries
@@ -302,6 +314,7 @@ class _PassCtx:
         elif sig is not None:
             token = ("s", sig)
             self.parked_sigs.add(sig)
+            self.parked_pins[sig] = (js.job.profile, js.fitted)
         else:
             return
 
@@ -348,6 +361,7 @@ class _PassCtx:
                 self.parked_running.discard(key)
             else:
                 self.parked_sigs.discard(key)
+                self.parked_pins.pop(key, None)
 
     # -- slope-indexed job order ---------------------------------------
     def refresh_order(self, sched, cluster: Cluster) -> None:
@@ -356,6 +370,8 @@ class _PassCtx:
         if 8 * len(self.dirty) >= len(self.members):
             entries = []
             self.order_key = {}
+            # lint: nondeterminism — entries are sorted below; visit
+            # order of the full rebuild cannot affect the result
             for jid, js in self.members.items():
                 key = self._order_entry(js, sched, cluster)
                 self.order_key[jid] = key
@@ -363,6 +379,8 @@ class _PassCtx:
             entries.sort()
             self.order = entries
         else:
+            # lint: nondeterminism — each dirty key is removed/insorted
+            # into a sorted list independently; repair order commutes
             for jid in self.dirty:
                 old = self.order_key.get(jid)
                 if old is not None:
@@ -478,6 +496,12 @@ class RubickScheduler:
         self._order_memo: dict[tuple, list] = {}
         self._memo_cluster: weakref.ref | None = None
         self._ctx: _PassCtx | None = None
+        self._san = None
+        if sanitize_enabled(self.cfg):
+            # deferred import: the sanitizer recomputes ground truth with
+            # this module's own helpers (import cycle otherwise)
+            from repro.analysis.sanitizer import SchedSanitizer
+            self._san = SchedSanitizer()
 
     # ------------------------------------------------------------------
     def _scope_memos(self, cluster: Cluster) -> None:
@@ -579,6 +603,8 @@ class RubickScheduler:
         if events is not None and events.refit:
             self._purge_refit_memos(events.refit)
         active = [j for j in jobs if j.status != "done"]
+        if self._san is not None:
+            self._san.begin_pass(active, cluster)
         ctx: _PassCtx | None = None
         if self.cfg.pass_engine == "incremental":
             ctx = self._ctx
@@ -710,6 +736,8 @@ class RubickScheduler:
                             continue
                     self._schedule_job(js, active, cluster, now, used,
                                        by_node, ctx, sig)
+        if self._san is not None:
+            self._san.end_pass(active, cluster, ctx, self)
 
     def _rebuild_ctx(self, active: list[JobState],
                      cluster: Cluster) -> _PassCtx:
@@ -900,6 +928,9 @@ class RubickScheduler:
             ctx.park_failed(js, self, cluster,
                             None if js.status == "running" else sig)
         elif sig is not None:
+            # lint: unscoped-id — pass-local memo: schedule() resets it
+            # every pass and the signature referents outlive the pass via
+            # the caller's jobs list
             failed.add(sig)
 
     def _group_order(self, js: JobState, cluster: Cluster,
@@ -1172,8 +1203,10 @@ class RubickScheduler:
         alias that object, and leaving it mutated made rolled-back walks
         look like phantom migrations — triggering spurious oracle
         re-measures and completion-event re-arms."""
-        for victim, orig_obj, content, plan, alloc, status, n_rcfg in \
-                shrunk.values():
+        # lint: nondeterminism — per-victim restores touch disjoint jobs
+        # and commute; rollback order cannot affect post-undo state
+        for entry in shrunk.values():
+            victim, orig_obj, content, plan, alloc, status, n_rcfg = entry
             if ctx is not None:
                 ctx.mark_dirty(victim)
                 ctx.bump_nodes(set(victim.placement) | set(content))

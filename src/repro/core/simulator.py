@@ -137,6 +137,11 @@ class Simulator:
         # drifting oracles take the measurement time (the hidden truth
         # moves); static oracles keep their plain signature
         self._drifting = bool(getattr(self.oracle, "drifting", False))
+        self._san = None
+        from repro.analysis import sanitize_enabled
+        if sanitize_enabled(getattr(scheduler, "cfg", None)):
+            from repro.analysis.sanitizer import SchedSanitizer
+            self._san = SchedSanitizer()
 
     # ------------------------------------------------------------------
     def _prefit(self, jobs: list[Job]) -> None:
@@ -289,11 +294,14 @@ class Simulator:
 
         active: list[JobState] = []        # arrived, not yet done
         done: list[JobState] = []
+        # id(s)-keyed run-local maps: every key's referent is pinned by
+        # ``states`` for the whole run
         pause_until: dict[int, float] = {}
         epoch: dict[int, int] = {}         # completion-event invalidation
         thpt: dict[int, float] = {}        # oracle samples/s per assignment
         violations = n_events = n_sched = n_refits = 0
         t = 0.0
+        san = self._san
 
         def advance(to: float) -> None:
             """Integrate progress/run_time over [t, to]: throughput is
@@ -306,12 +314,16 @@ class Simulator:
             for s in active:
                 if s.status != "running":
                     continue
+                old = (s.run_time, s.progress)
                 s.run_time += dt           # wall-clock incl. reconfig pause
                 pu = pause_until.get(id(s), 0.0)
                 eff = dt if pu <= t else to - pu
                 if eff > 0.0:
                     s.progress += thpt.get(id(s), 0.0) * eff \
                         / s.job.profile.b
+                if san is not None:
+                    san.check_window(s, old, t, to, pu,
+                                     thpt.get(id(s), 0.0))
 
         def resample(s: JobState, now: float) -> None:
             """Re-measure the oracle (assignment changed — a reschedule
@@ -427,6 +439,7 @@ class Simulator:
                         if was[2] != "running":        # (re)started
                             resample(s, t)
                         elif (s.plan, s.alloc) != was[:2]:
+                            # lint: unscoped-id — run-local; pinned above
                             pause_until[id(s)] = t + self.reconfig_cost
                             heapq.heappush(heap, (t + self.reconfig_cost,
                                                   EV_PAUSE_END, next(seq),
@@ -489,6 +502,8 @@ class Simulator:
                 was = prev.get(id(s))
                 if was and s.status == "running" and was[2] == "running" \
                         and (s.plan, s.alloc) != was[:2]:
+                    # lint: unscoped-id — run-local map; keys pinned by
+                    # ``states`` for the whole run
                     pause_until[id(s)] = t + self.reconfig_cost
 
             # compute throughputs (paused jobs contribute 0 until resumed)
@@ -497,6 +512,8 @@ class Simulator:
                 if s.status != "running":
                     continue
                 if pause_until.get(id(s), 0.0) > t:
+                    # lint: unscoped-id — run-local map; keys pinned by
+                    # ``states`` for the whole run
                     thpts[id(s)] = 0.0
                     continue
                 thpts[id(s)] = self._true_throughput(s, t)
@@ -550,19 +567,23 @@ class Simulator:
             # was paused), and run_time counts the full running-state
             # window including the paused part (it is the T of the
             # reconfig-penalty guard)
+            san = self._san
             for s in active:
                 if s.status != "running":
                     continue
+                old = (s.run_time, s.progress)
                 s.run_time += dt
                 pu = pause_until.get(id(s), 0.0)
                 eff = dt if pu <= t else t + dt - pu
-                if eff <= 0.0:
-                    continue
-                th = thpts[id(s)]
-                if pu > t:       # resumed mid-window: sample AT the resume
-                    th = self._true_throughput(s, pu)
-                s.progress += th * eff / s.job.profile.b
-                if s.progress >= s.job.target_iters - 1e-6:
+                th = 0.0
+                if eff > 0.0:
+                    th = thpts[id(s)]
+                    if pu > t:   # resumed mid-window: sample AT the resume
+                        th = self._true_throughput(s, pu)
+                    s.progress += th * eff / s.job.profile.b
+                if san is not None:
+                    san.check_window(s, old, t, t + dt, pu, th)
+                if eff > 0.0 and s.progress >= s.job.target_iters - 1e-6:
                     s.status = "done"
                     s.finish_time = t + dt
                     s.placement = {}

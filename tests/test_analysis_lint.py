@@ -1,0 +1,391 @@
+"""Linter self-tests: one positive + one negative snippet per rule class,
+waiver mechanics, the unpinned-signature regression (PR 7's bugfix), the
+Shapes: contract validated against a live batch call, and the
+zero-violations snapshot over the real tree.
+
+Snippets go through ``LintModule`` with a relpath chosen to hit each
+rule's file/scope gating (rollback wants ``core/scheduler.py`` /
+``core/baselines.py``, determinism wants ``core/``-ish paths, shape
+contracts only apply to the three batch-kernel files).
+"""
+
+import textwrap
+
+import numpy as np
+
+from repro.analysis.lint import main as lint_main
+from repro.analysis.lint import run_lint
+from repro.analysis.rules.base import LintModule
+from repro.analysis.rules.determinism import DeterminismRule
+from repro.analysis.rules.dirty_coverage import DirtyCoverageRule
+from repro.analysis.rules.memo_scoping import MemoScopingRule
+from repro.analysis.rules.rollback import RollbackRule
+from repro.analysis.rules.shape_contracts import (ShapeContractRule,
+                                                  parse_shapes)
+from repro.core import memory, paper_models
+from repro.core.perfmodel import Env
+from repro.parallel import plan_table
+
+
+def _mod(source: str, relpath: str = "core/snippet.py") -> LintModule:
+    return LintModule("<test>", textwrap.dedent(source), relpath)
+
+
+def _check(rule, source: str, relpath: str = "core/snippet.py"):
+    return rule.check(_mod(source, relpath))
+
+
+# --- unscoped-id -------------------------------------------------------------
+
+def test_memo_scoping_flags_unpinned_direct_key():
+    vs = _check(MemoScopingRule(), """
+        class Memo:
+            def note(self, js, val):
+                self.seen[id(js)] = val
+    """)
+    assert [v.rule for v in vs] == ["unscoped-id"]
+    assert "seen" in vs[0].message
+
+
+def test_memo_scoping_accepts_self_pinned_and_class_pinned():
+    vs = _check(MemoScopingRule(), """
+        class Ctx:
+            def register(self, js, slope):
+                self.members[id(js)] = js          # self-pinned
+                self.slopes[id(js)] = slope        # covered by class pin
+    """)
+    assert vs == []
+
+
+def test_memo_scoping_flags_unpinned_walk_signature():
+    # the PR 7 bugfix regression: parked walk signatures embed
+    # id(profile)/id(fitted) via a sig function; storing them without a
+    # sibling *_pins mapping lets recycled addresses alias parked walks
+    vs = _check(MemoScopingRule(), """
+        def _walk_sig(js):
+            return (id(js.job.profile), id(js.fitted))
+
+        class Ctx:
+            def park(self, js):
+                self.parked.add(_walk_sig(js))
+    """)
+    assert [v.rule for v in vs] == ["unscoped-id"]
+    assert "parked" in vs[0].message
+
+
+def test_memo_scoping_accepts_sig_with_pin_mapping():
+    # the shipped fix: a parked_pins sibling mapping keeps the signature
+    # referents alive for as long as the signature is remembered
+    vs = _check(MemoScopingRule(), """
+        def _walk_sig(js):
+            return (id(js.job.profile), id(js.fitted))
+
+        class Ctx:
+            def park(self, js):
+                sig = _walk_sig(js)
+                self.parked.add(sig)
+                self.parked_pins[sig] = (js.job.profile, js.fitted)
+    """)
+    assert vs == []
+
+
+# --- waiver mechanics --------------------------------------------------------
+
+def test_waiver_suppresses_and_is_marked_used():
+    mod = _mod("""
+        class Memo:
+            def note(self, js, val):
+                # lint: unscoped-id — entries dropped before js can die
+                self.seen[id(js)] = val
+    """)
+    vs = [v for v in MemoScopingRule().check(mod)
+          if not mod.waived(v.line, v.rule)]
+    assert vs == []
+    assert mod.unused_waivers() == []
+
+
+def test_unused_waiver_is_reported():
+    mod = _mod("""
+        # lint: unscoped-id — nothing here needs this
+        X = 1
+    """)
+    assert MemoScopingRule().check(mod) == []
+    assert mod.unused_waivers() == [(2, "unscoped-id")]
+
+
+# --- rollback-incomplete -----------------------------------------------------
+
+def test_rollback_flags_unrestored_attr_and_missing_ctx_notify():
+    vs = _check(RollbackRule(), """
+        class RubickScheduler:
+            def _shrink(self, victim, ctx):
+                victim.placement = {}
+                victim.plan = None
+                ctx.mark_dirty(victim)
+                ctx.bump_node(3)
+
+            def _undo(self, shrunk, ctx):
+                for victim, placement in shrunk.values():
+                    victim.placement = placement
+                    ctx.mark_dirty(victim)
+    """, relpath="core/scheduler.py")
+    msgs = [v.message for v in vs]
+    assert all(v.rule == "rollback-incomplete" for v in vs)
+    assert any("victim.plan" in m and "never restores" in m for m in msgs)
+    assert any("bump_node" in m for m in msgs)
+    assert len(vs) == 2
+
+
+def test_rollback_accepts_complete_undo():
+    vs = _check(RollbackRule(), """
+        class RubickScheduler:
+            def _shrink(self, victim, ctx):
+                victim.placement = {}
+                victim.plan = None
+                ctx.mark_dirty(victim)
+
+            def _undo(self, shrunk, ctx):
+                for victim, placement, plan in shrunk.values():
+                    victim.placement = placement
+                    victim.plan = plan
+                    ctx.mark_dirty(victim)
+    """, relpath="core/scheduler.py")
+    assert vs == []
+
+
+def test_rollback_reports_table_drift():
+    # a core/scheduler.py without the configured pair means the tables
+    # rotted — that must be a loud failure, not silent rule skipping
+    vs = _check(RollbackRule(), "class Other:\n    pass\n",
+                relpath="core/scheduler.py")
+    assert [v.rule for v in vs] == ["rollback-incomplete"]
+    assert vs[0].line == 1 and "not found" in vs[0].message
+
+
+def test_rollback_samefn_needs_restore_loop():
+    src = """
+        class AntManLike:
+            def _try_preempt(self, need, active, used):
+                saved = []
+                for victim in active:
+                    saved.append((victim, victim.placement))
+                    victim.status = "queued"
+                    victim.placement = {}
+                return False
+    """
+    vs = _check(RollbackRule(), src, relpath="core/baselines.py")
+    assert {v.rule for v in vs} == {"rollback-incomplete"}
+    assert {m for v in vs for m in ("status", "placement")
+            if f"victim.{m}" in v.message} == {"status", "placement"}
+
+    fixed = """
+        class AntManLike:
+            def _try_preempt(self, need, active, used):
+                saved = []
+                for victim in active:
+                    saved.append((victim, victim.placement))
+                    victim.status = "queued"
+                    victim.placement = {}
+                for victim, placement in saved:
+                    victim.status = "running"
+                    victim.placement = placement
+                return False
+    """
+    assert _check(RollbackRule(), fixed,
+                  relpath="core/baselines.py") == []
+
+
+# --- dirty-coverage ----------------------------------------------------------
+
+def test_dirty_coverage_flags_never_written_read():
+    vs = _check(DirtyCoverageRule(), """
+        class _PassCtx:
+            def __init__(self):
+                self.order = []
+
+            def refresh_order(self):
+                return list(self.phantom) + self.order
+    """)
+    assert [v.rule for v in vs] == ["dirty-coverage"]
+    assert "phantom" in vs[0].message
+
+
+def test_dirty_coverage_accepts_ctx_spelled_writes():
+    # writes through a module-level ``ctx.`` reference count as an
+    # invalidation path (the real engine resets ctx.cur_read that way)
+    vs = _check(DirtyCoverageRule(), """
+        class _PassCtx:
+            def __init__(self):
+                self.order = []
+
+            def refresh_order(self):
+                return list(self.phantom) + self.order
+
+        def apply_events(ctx, events):
+            ctx.phantom = ()
+    """)
+    assert vs == []
+
+
+# --- nondeterminism ----------------------------------------------------------
+
+def test_determinism_flags_wallclock_and_unseeded_rng():
+    src = """
+        import time
+        import numpy as np
+
+        def decide(jobs):
+            rng = np.random.default_rng()
+            return time.time() + np.random.rand()
+    """
+    vs = _check(DeterminismRule(), src)
+    assert all(v.rule == "nondeterminism" for v in vs)
+    msgs = " | ".join(v.message for v in vs)
+    assert "time.time" in msgs
+    assert "without a seed" in msgs
+    assert "np.random.rand" in msgs
+    assert len(vs) == 3
+    # outside core//calibration/ the rule does not apply
+    assert _check(DeterminismRule(), src, relpath="bench/snippet.py") == []
+
+
+def test_determinism_accepts_seeded_rng_and_perf_counter():
+    vs = _check(DeterminismRule(), """
+        import time
+        import numpy as np
+
+        def decide(jobs, seed):
+            rng = np.random.default_rng(seed)
+            t0 = time.perf_counter()
+            return rng.random(), t0
+    """)
+    assert vs == []
+
+
+def test_determinism_flags_id_ordered_iteration():
+    src = """
+        def pick(jobs):
+            memo = {}
+            for j in jobs:
+                memo[id(j)] = j
+            for jid, js in memo.items():
+                js.step()
+    """
+    vs = _check(DeterminismRule(), src)
+    assert [v.rule for v in vs] == ["nondeterminism"]
+    assert "memo" in vs[0].message and "sorted()" in vs[0].message
+
+    assert _check(DeterminismRule(), """
+        def pick(jobs):
+            memo = {}
+            for j in jobs:
+                memo[id(j)] = j
+            for jid in sorted(memo):
+                memo[jid].step()
+    """) == []
+
+
+# --- shape-contract ----------------------------------------------------------
+
+def test_shape_contract_flags_missing_block_and_params():
+    vs = _check(ShapeContractRule(), """
+        def foo_batch(x, y):
+            '''No contract at all.'''
+            return x + y
+
+        def bar_batch(x, y):
+            '''Partial.
+
+            Shapes:
+                x: (S,) xs
+            '''
+            return x + y
+    """, relpath="core/perfmodel.py")
+    assert all(v.rule == "shape-contract" for v in vs)
+    msgs = " | ".join(v.message for v in vs)
+    assert "foo_batch" in msgs and "no Shapes" in msgs
+    assert "misses parameter(s) y" in msgs
+    assert "misses the 'returns'" in msgs
+    assert len(vs) == 3
+
+
+def test_shape_contract_accepts_complete_block_and_gates_on_file():
+    src = """
+        def foo_batch(x, y):
+            '''Batched twin.
+
+            Shapes:
+                x: (S,) xs
+                y: (S,) ys
+                returns: (S,) sums
+            '''
+            return x + y
+
+        def loss(z_rows, t):
+            '''Shapes:
+                z_rows: (R, 7) parameter rows
+                t: (S,) samples
+                returns: (R,) loss
+            '''
+            return z_rows
+    """
+    assert _check(ShapeContractRule(), src,
+                  relpath="core/fitting.py") == []
+    # EXTRA_FUNCS coverage: a bare ``loss`` without a block is flagged
+    vs = _check(ShapeContractRule(), """
+        def loss(z_rows, t):
+            return z_rows
+    """, relpath="core/fitting.py")
+    assert [v.rule for v in vs] == ["shape-contract"]
+    # outside the batch-kernel files the rule does not apply
+    assert _check(ShapeContractRule(), src,
+                  relpath="core/scheduler.py") == []
+
+
+def test_parse_shapes_extraction():
+    assert parse_shapes(None) is None
+    assert parse_shapes("just prose, no block") is None
+    decls = parse_shapes(
+        "Twin.\n\nShapes:\n    x: (S,) xs\n    returns: (S,) out\n\ntail")
+    assert decls == {"x": "(S,) xs", "returns": "(S,) out"}
+
+
+def test_estimate_batch_honors_declared_shapes():
+    """The machine-readable contract matches the live call: scalar allocs
+    against an (S,) plan table broadcast to (S,), per the declaration."""
+    decls = parse_shapes(memory.estimate_batch.__doc__)
+    assert decls is not None
+    assert {"profile", "cols", "alloc_gpus", "alloc_cpus", "env",
+            "returns"} <= set(decls)
+    prof = paper_models.profile("gpt2-1.5b")
+    tbl = plan_table.get(prof.b, 16, 8)
+    gpu, host, cpu = memory.estimate_batch(
+        prof, tbl.cols, np.asarray(8), np.asarray(64), Env())
+    want = np.broadcast_shapes((len(tbl.cols),), np.shape(np.asarray(8)))
+    assert gpu.shape == host.shape == cpu.shape == want
+
+
+# --- driver + snapshot -------------------------------------------------------
+
+def test_cli_exit_codes(tmp_path, capsys):
+    core = tmp_path / "core"
+    core.mkdir()
+    bad = core / "bad.py"
+    bad.write_text("import time\n\ndef f():\n    return time.time()\n")
+    assert lint_main([str(tmp_path)]) == 1
+    assert "time.time" in capsys.readouterr().out
+
+    bad.write_text("def f():\n    return 1\n")
+    assert lint_main([str(tmp_path)]) == 0
+    # strict mode fails on a waiver that suppresses nothing
+    bad.write_text("# lint: nondeterminism — stale\ndef f():\n    return 1\n")
+    assert lint_main([str(tmp_path)]) == 0
+    assert lint_main([str(tmp_path), "--strict"]) == 1
+
+
+def test_live_tree_is_clean():
+    """The acceptance snapshot: src/repro carries zero violations and
+    zero stale waivers under every house rule."""
+    violations, warnings = run_lint()
+    assert violations == []
+    assert warnings == []

@@ -1,0 +1,330 @@
+"""SchedSanitizer reintroduce-the-bug suite (ISSUE 7 satellite).
+
+Each fixture subclasses a scheduler and reverts ONE historical bugfix
+(the ISSUE 2 state-accounting fixes and the ISSUE 3 rollback-aliasing
+fix) in the override, then drives the original regression scenario with
+sanitizing on: the runtime cross-checks must catch every reverted bug,
+and the unmodified schedulers must run the same scenarios clean.
+"""
+
+import pytest
+
+from repro.core import baselines, memory, paper_models, trace
+from repro.core.cluster import Cluster, Job, JobState
+from repro.core.perfmodel import Alloc, FitParams
+from repro.core.scheduler import RubickScheduler, SchedulerConfig
+from repro.analysis.sanitizer import SanitizerViolation, SchedSanitizer
+from repro.parallel.plan import ExecutionPlan
+
+FIT_CACHE: dict = {}
+
+
+def _job(name, profile, req_gpus, submit=0.0, guaranteed=True, tenant="A",
+         plan=None, gpu_type=""):
+    return Job(name=name, profile=profile, submit=submit,
+               target_iters=1e6, req_gpus=req_gpus,
+               req_cpus=12 * req_gpus,
+               orig_plan=plan or ExecutionPlan(dp=1),
+               guaranteed=guaranteed, tenant=tenant, gpu_type=gpu_type)
+
+
+def _cfg(**kw):
+    kw.setdefault("sanitize", True)
+    return SchedulerConfig(**kw)
+
+
+# --- bug 1: per-node host-memory fit dropped from _commit --------------------
+
+class _NoHostCheckScheduler(RubickScheduler):
+    """_commit without the per-node host-memory check (the pre-fix code
+    wrote est.host_bytes/len(placement) into every node unchecked)."""
+
+    def _commit(self, js, curve, env, cluster, wu, placement, got_g,
+                got_c, now):
+        pernode = tuple(sorted((g for g, _, _ in placement.values()),
+                               reverse=True))
+        if self.cfg.reconfigure_plans:
+            pt = curve.best_plan_at_most(got_g, got_c, gpus_per_node=pernode)
+            plan = pt.plan
+        else:
+            plan = self._fixed_plan(js, got_g, env)
+        if plan is None:
+            return False
+        alloc = Alloc(got_g, got_c, gpus_per_node=pernode)
+        est = memory.estimate(js.job.profile, plan, alloc, env)
+        if est.gpu_bytes > env.gpu_mem:
+            return False
+        host_share = est.host_bytes / max(len(placement), 1)
+        if js.status == "running" and not self._reconfig_ok(js, plan,
+                                                            alloc, now):
+            return False
+        for nid in placement:
+            g, c, _ = placement[nid]
+            placement[nid] = (g, c, host_share)
+        changed = (plan != js.plan or alloc != js.alloc)
+        js.placement = placement
+        js.alloc = alloc
+        js.plan = plan
+        if js.status == "queued":
+            js.status = "running"
+            js.start_time = now if js.start_time is None else js.start_time
+        elif changed:
+            js.n_reconfig += 1
+        return True
+
+
+def _host_mem_scenario(sched):
+    """Two ZeRO-Offload jobs vs one node with 150 GB host memory: only
+    one fits (tests/test_scheduler_fixes.py::test_host_memory_checked...)."""
+    prof = paper_models.profile("llama2-7b")
+    cluster = Cluster(n_nodes=1, mem_per_node=150e9)
+    states = [JobState(job=_job(f"j{i}", prof, 1), fitted=FitParams())
+              for i in range(2)]
+    sched.schedule(states, cluster, 0.0)
+    return states
+
+
+def test_sanitizer_catches_unchecked_host_memory():
+    sched = _NoHostCheckScheduler(cfg=_cfg(reallocate_resources=False))
+    with pytest.raises(SanitizerViolation) as exc:
+        _host_mem_scenario(sched)
+    assert exc.value.rule == "capacity"
+    assert exc.value.sites            # provenance points at mutation sites
+
+
+def test_clean_host_memory_scenario_passes():
+    states = _host_mem_scenario(
+        RubickScheduler(cfg=_cfg(reallocate_resources=False)))
+    assert sum(1 for s in states if s.status == "running") == 1
+
+
+# --- bugs 2 + 3: failed-walk rollback reverted -------------------------------
+
+class _NoUndoScheduler(RubickScheduler):
+    """_undo as a no-op: a failed walk's shrinks persist (the original
+    zero-gain-shrink bug)."""
+
+    def _undo(self, shrunk, ctx=None):
+        return
+
+
+class _CopyUndoScheduler(RubickScheduler):
+    """_undo restoring every FIELD but into a NEW placement dict,
+    abandoning the mutated original (the rollback-aliasing bug: external
+    snapshots of the pre-pass dict saw phantom migrations)."""
+
+    def _undo(self, shrunk, ctx=None):
+        for victim, orig_obj, content, plan, alloc, status, n_rcfg \
+                in shrunk.values():
+            if ctx is not None:
+                ctx.mark_dirty(victim)
+                ctx.bump_nodes(set(victim.placement) | set(content))
+                if victim.job.guaranteed:
+                    restored = sum(g for g, _, _ in content.values())
+                    ctx.ledger_add_live(victim.job.tenant,
+                                        restored - victim.total_gpus)
+            victim.placement = dict(content)       # fresh dict, not orig_obj
+            victim.plan = plan
+            victim.alloc = alloc
+            victim.status = status
+            victim.n_reconfig = n_rcfg
+
+
+def _failed_walk_scenario(sched):
+    """A 16-GPU arrival on a full 8-GPU node shrinks the best-effort
+    resident, then fails to place and must roll back
+    (tests/test_incremental_sched.py::test_failed_walk_is_side_effect...)."""
+    from repro.core.cluster import SchedEvents
+    cluster = Cluster(n_nodes=1)
+    a = JobState(job=_job("a", paper_models.profile("roberta-355m"), 4,
+                          guaranteed=False, tenant="B"),
+                 fitted=FitParams())
+    b = JobState(job=_job("b", paper_models.profile("llama-30b"), 4),
+                 fitted=FitParams())
+    states = [a, b]
+    sched.schedule(states, cluster, 0.0, events=SchedEvents(arrived=[a, b]))
+    big = JobState(job=_job("big", paper_models.profile("llama-30b"), 16),
+                   fitted=FitParams())
+    states.append(big)
+    sched.schedule(states, cluster, 60.0, events=SchedEvents(arrived=[big]))
+    return states
+
+
+def test_sanitizer_catches_missing_rollback():
+    sched = _NoUndoScheduler(cfg=_cfg(reconfigure_plans=False))
+    with pytest.raises(SanitizerViolation) as exc:
+        _failed_walk_scenario(sched)
+    assert exc.value.rule in ("shrink-no-beneficiary", "usage-map")
+
+
+def test_sanitizer_catches_rollback_into_new_dict():
+    sched = _CopyUndoScheduler(cfg=_cfg(reconfigure_plans=False))
+    with pytest.raises(SanitizerViolation) as exc:
+        _failed_walk_scenario(sched)
+    assert exc.value.rule == "rollback-aliasing"
+
+
+def test_clean_failed_walk_scenario_passes():
+    states = _failed_walk_scenario(
+        RubickScheduler(cfg=_cfg(reconfigure_plans=False)))
+    assert states[-1].status == "queued"
+
+
+# --- bug 4: AntMan preemption without rollback -------------------------------
+
+class _NoRollbackAntMan(baselines.AntManLike):
+    """_try_preempt whose failure path restores the victims' STATE but
+    not the pass-wide usage map (the accounting half of the preemption-
+    rollback fix): later gangs in the same pass see phantom free
+    capacity and over-place the node."""
+
+    def _try_preempt(self, js, active, cluster, now, used):
+        be = [j for j in active if j.status == "running"
+              and not j.job.guaranteed]
+        preempted = []
+        for victim in be:
+            preempted.append((victim, dict(victim.placement),
+                              victim.plan, victim.alloc,
+                              victim.n_reconfig))
+            self._fold(victim.placement, used, sign=-1)
+            victim.status = "queued"
+            victim.placement = {}
+            victim.plan = None
+            victim.alloc = None
+            victim.n_reconfig += 1
+            if self._gang_place(js, active, cluster, now, used):
+                return True
+        for victim, placement, plan, alloc, n_rcfg in preempted:
+            victim.status = "running"
+            victim.placement = placement
+            victim.plan = plan
+            victim.alloc = alloc
+            victim.n_reconfig = n_rcfg
+            # BUG: missing self._fold(placement, used) — the victims'
+            # GPUs stay "free" in the pass-wide usage map
+        return False
+
+
+def _antman_scenario(sched):
+    """Two running best-effort jobs, then an unplaceable 16-GPU
+    guaranteed arrival plus a third best-effort job in one pass on an
+    8-GPU cluster (tests/test_scheduler_fixes.py::
+    test_antman_rolls_back_useless_preemptions, extended)."""
+    prof = paper_models.profile("roberta-355m")
+    cluster = Cluster(n_nodes=1)
+    states = [JobState(job=_job(f"be{i}", prof, 4, guaranteed=False,
+                                tenant="B"), fitted=FitParams())
+              for i in range(2)]
+    sched.schedule(states, cluster, 0.0)
+    states.append(JobState(job=_job("g", prof, 16), fitted=FitParams()))
+    states.append(JobState(job=_job("be2", prof, 4, submit=10.0,
+                                    guaranteed=False, tenant="B"),
+                           fitted=FitParams()))
+    sched.schedule(states, cluster, 10.0)
+    return states
+
+
+def test_sanitizer_catches_unrestored_preemption_accounting():
+    sched = _NoRollbackAntMan()
+    sched.cfg.sanitize = True
+    sched._san = SchedSanitizer()
+    with pytest.raises(SanitizerViolation) as exc:
+        _antman_scenario(sched)
+    assert exc.value.rule == "capacity"
+
+
+def test_clean_antman_scenario_passes():
+    sched = baselines.AntManLike()
+    sched.cfg.sanitize = True
+    sched._san = SchedSanitizer()
+    states = _antman_scenario(sched)
+    assert states[2].status == "queued"          # the 16-GPU job
+    assert all(s.status == "running" for s in states[:2])
+
+
+# --- bug 5: quota charged at minRes, growth unbounded ------------------------
+
+class _MinResQuotaScheduler(RubickScheduler):
+    """Pre-fix quota accounting: admission charges each running job's
+    minRes floor instead of the GPUs it actually holds, and growth
+    ignores the tenant's remaining quota room — so tenants hold more
+    live GPUs than their quota."""
+
+    def _quota_ok(self, js, jobs, ctx=None):
+        quota = self.quotas.get(js.job.tenant)
+        if quota is None:
+            return True
+        used = sum((j.min_res[0] if j.min_res else j.job.req_gpus)
+                   for j in jobs
+                   if j.status == "running" and j.job.guaranteed
+                   and j.job.tenant == js.job.tenant)
+        need = js.min_res[0] if js.min_res else js.job.req_gpus
+        return used + need <= quota
+
+    def _quota_room(self, js, active, ctx=None):
+        return None
+
+
+def _quota_scenario(sched):
+    """Two 4-GPU guaranteed jobs of one tenant under a 6-GPU quota: the
+    second admission must be capped to the tenant's remaining room
+    (tests/test_scheduler_fixes.py::test_quota_counts_grown_allocations)."""
+    prof = paper_models.profile("llama2-7b")
+    cluster = Cluster(n_nodes=2)                  # 16 GPUs, quota 6
+    states = [JobState(job=_job("j1", prof, 4), fitted=FitParams())]
+    sched.schedule(states, cluster, 0.0)
+    states.append(JobState(job=_job("j2", prof, 4, submit=100.0),
+                           fitted=FitParams()))
+    sched.schedule(states, cluster, 100.0)
+    return states
+
+
+def test_sanitizer_catches_minres_quota_accounting():
+    sched = _MinResQuotaScheduler(cfg=_cfg(), quotas={"A": 6})
+    with pytest.raises(SanitizerViolation) as exc:
+        _quota_scenario(sched)
+    assert exc.value.rule == "quota"
+
+
+def test_clean_quota_scenario_passes():
+    states = _quota_scenario(RubickScheduler(cfg=_cfg(),
+                                             quotas={"A": 6}))
+    live = sum(s.total_gpus for s in states if s.status == "running")
+    assert live <= 6
+
+
+# --- bug 6: progress credited through a reconfiguration pause ----------------
+
+def test_sanitizer_catches_pause_crediting():
+    """A job paused until mid-window must only earn progress over the
+    post-pause seconds; crediting the whole window (the pre-fix engine
+    arithmetic) trips the window check."""
+    san = SchedSanitizer()
+    prof = paper_models.profile("roberta-355m")
+    s = JobState(job=_job("p", prof, 4), fitted=FitParams(),
+                 status="running")
+    th, t, to, pu = 10.0, 100.0, 160.0, 130.0
+    old = (s.run_time, s.progress)
+    s.run_time += to - t
+    s.progress += th * (to - t) / prof.b           # BUG: full window
+    with pytest.raises(SanitizerViolation) as exc:
+        san.check_window(s, old, t, to, pu, th)
+    assert exc.value.rule == "window-accounting"
+    # correct crediting (post-pause seconds only) passes
+    s.progress = old[1] + th * (to - pu) / prof.b
+    san.check_window(s, old, t, to, pu, th)
+
+
+# --- clean end-to-end runs under both simulator engines ----------------------
+
+@pytest.mark.parametrize("mode", ["event", "discrete"])
+def test_clean_simulation_sanitized(mode):
+    from repro.core.simulator import Simulator
+    jobs = trace.philly(n_jobs=20, hours=4, seed=11, load_scale=3.0,
+                        variant="mt")
+    sched = baselines.make_rubick(quotas={"A": 24})
+    sched.cfg.sanitize = True
+    sched._san = SchedSanitizer()
+    r = Simulator(Cluster(n_nodes=4), sched, fit_cache=FIT_CACHE,
+                  mode=mode).run(jobs)
+    assert r.jcts                     # the run completed jobs, sanitized
