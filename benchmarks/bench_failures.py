@@ -1,0 +1,238 @@
+"""Failure & elasticity engine: recovery policy, spot churn, parity.
+
+Acceptance (ISSUE 8):
+  * recovery — under a failure storm on a contended cluster,
+    shrink-instead-of-kill recovery beats kill-and-requeue on BOTH
+    average JCT and guarantee violations (full mode gates on this);
+  * parity — the incremental pass engine stays bit-exact with the full
+    engine across capacity churn (node failures + spot arrive/revoke);
+    gated in smoke AND full mode;
+  * spot — diurnal spot capacity is injected and revoked; revocations
+    evict residents through the recovery path.
+
+The storm fleet is built from Table-2 models with their real best plans
+(plan-table argmax under the analytic oracle), so guarantee baselines
+are meaningful: a degraded or queued guaranteed job measurably violates.
+
+    PYTHONPATH=src python -m benchmarks.bench_failures [--smoke]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import _artifacts
+from repro.analysis import sanitize_enabled
+from repro.core import baselines, paper_models, trace
+from repro.core.cluster import Cluster, Job
+from repro.core.oracle import AnalyticOracle
+from repro.core.perfmodel import Alloc, Env
+from repro.core.simulator import Simulator
+
+_ORACLE = AnalyticOracle(env=Env())
+
+HORIZON_S = 86400.0
+
+
+def _best_plan(prof, gpus: int, allow_tp_pp: bool = True):
+    """The plan a real submission would carry: plan-table argmax under
+    the analytic oracle (same idiom as trace.generate's 'bp' variant)."""
+    from repro.parallel import plan_table
+    tbl = plan_table.get(prof.b, gpus, 8, allow_tp_pp=allow_tp_pp)
+    th = _ORACLE.throughput_batch(prof, tbl, gpus, 12 * gpus)
+    th = np.where(tbl.exact_mask(gpus), th, 0.0)
+    return tbl.plans[int(th.argmax())]
+
+
+def _fleet_job(name: str, model: str, gpus: int, submit: float,
+               duration_s: float, allow_tp_pp: bool = True) -> Job:
+    prof = paper_models.profile(model)
+    plan = _best_plan(prof, gpus, allow_tp_pp=allow_tp_pp)
+    th = _ORACLE.throughput(prof, plan, Alloc(gpus, 12 * gpus))
+    return Job(name=name, profile=prof, submit=submit,
+               target_iters=duration_s * th / prof.b,
+               req_gpus=gpus, req_cpus=12 * gpus, orig_plan=plan,
+               guaranteed=True, tenant="A")
+
+
+def storm_fleet(n_big: int, n_small: int, big_s: float, small_s: float,
+                seed: int = 0) -> list[Job]:
+    """Guaranteed Table-2 fleet sized to over-subscribe the survivors of
+    a storm: big llama-30b jobs whose minRes equals their full request
+    (so a killed one cannot re-admit at reduced size) plus gpt2-1.5b
+    fillers keeping the cluster packed."""
+    rng = np.random.default_rng(seed)
+    jobs = [_fleet_job(f"big{i}", "llama-30b", 16,
+                       float(rng.uniform(0, 1800)), big_s)
+            for i in range(n_big)]
+    jobs += [_fleet_job(f"sm{i}", "gpt2-1.5b", 8,
+                        float(rng.uniform(0, 3600)), small_s,
+                        allow_tp_pp=False)
+             for i in range(n_small)]
+    return sorted(jobs, key=lambda j: j.submit)
+
+
+def _run(cluster: Cluster, jobs, cache, *, engine="incremental",
+         recovery="shrink", capacity=None):
+    sched = baselines.make_rubick(pass_engine=engine)
+    sched.cfg.recovery = recovery
+    sim = Simulator(cluster, sched, fit_cache=dict(cache),
+                    capacity=capacity)
+    res = sim.run(jobs, max_time=7 * HORIZON_S)
+    return res, sim
+
+
+def _goodput(sim, res) -> float:
+    """Useful iterations per GPU-hour of makespan (progress past the
+    target is clipped — reruns of rolled-back work don't count)."""
+    useful = sum(min(s.progress, s.job.target_iters)
+                 for s in sim.last_states)
+    gpu_h = sim.cluster.total_gpus * max(res.makespan, 1.0) / 3600.0
+    return useful / gpu_h
+
+
+def _metrics(res, sim) -> dict:
+    return {"avg_jct_h": round(res.avg_jct / 3600, 4),
+            "makespan_h": round(res.makespan / 3600, 3),
+            "violations": res.guarantee_violations,
+            "goodput_iters_per_gpu_h": round(_goodput(sim, res), 2),
+            "n_cap_events": res.n_cap_events,
+            "n_shrink_recover": res.n_shrink_recover,
+            "n_kill_requeue": res.n_kill_requeue,
+            "n_reconfig": res.n_reconfig}
+
+
+def storm_rows(cache, smoke: bool) -> list[dict]:
+    if smoke:
+        n_nodes, jobs = 4, storm_fleet(2, 2, 3 * 3600.0, 4 * 3600.0)
+        cap = trace.failure_storm(n_nodes, HORIZON_S, seed=11,
+                                  mtbf_s=4 * 86400.0, mttr_s=3600.0,
+                                  storm=(3600.0, 3 * 3600.0, 20.0))
+    else:
+        n_nodes, jobs = 8, storm_fleet(5, 4, 4 * 3600.0, 5 * 3600.0)
+        cap = trace.failure_storm(n_nodes, HORIZON_S, seed=11,
+                                  mtbf_s=4 * 86400.0, mttr_s=2 * 3600.0,
+                                  storm=(5400.0, 6 * 3600.0, 25.0))
+    rows, by_mode = [], {}
+    for mode in ("shrink", "kill"):
+        t0 = time.perf_counter()
+        res, sim = _run(Cluster(n_nodes=n_nodes), jobs, cache,
+                        recovery=mode, capacity=cap)
+        secs = time.perf_counter() - t0
+        by_mode[mode] = res
+        rows.append({"name": f"failures/storm_{mode}",
+                     "us_per_call": secs / max(res.n_sched_calls, 1) * 1e6,
+                     "derived": {**_metrics(res, sim),
+                                 "wall_s": round(secs, 2),
+                                 "n_jobs": len(jobs),
+                                 "gpus": n_nodes * 8}})
+    s, k = by_mode["shrink"], by_mode["kill"]
+    rows.append({"name": "failures/shrink_vs_kill", "derived": {
+        "jct_shrink_h": round(s.avg_jct / 3600, 4),
+        "jct_kill_h": round(k.avg_jct / 3600, 4),
+        "jct_delta_pct": round((k.avg_jct - s.avg_jct)
+                               / max(k.avg_jct, 1e-9) * 100, 2),
+        "viol_shrink": s.guarantee_violations,
+        "viol_kill": k.guarantee_violations,
+        "pass_shrink_beats_kill": (
+            bool(s.avg_jct < k.avg_jct
+                 and s.guarantee_violations < k.guarantee_violations)
+            if not smoke else None)}})
+    return rows
+
+
+def spot_row(cache, smoke: bool) -> dict:
+    n_reg, n_spot = (1, 1) if smoke else (3, 2)
+    cluster = Cluster(n_nodes=n_reg)
+    spot = cluster.add_spot_nodes(n_spot)
+    n_jobs = 4 if smoke else 12
+    jobs = trace.generate(n_jobs=n_jobs, hours=3, seed=7, load_scale=2.0)
+    cap = trace.spot_churn(spot, HORIZON_S, seed=3, period_s=6 * 3600.0,
+                           window_frac=0.5, jitter_s=600.0)
+    t0 = time.perf_counter()
+    res, sim = _run(cluster, jobs, cache, capacity=cap)
+    secs = time.perf_counter() - t0
+    return {"name": "failures/spot_churn",
+            "us_per_call": secs / max(res.n_sched_calls, 1) * 1e6,
+            "derived": {**_metrics(res, sim),
+                        "wall_s": round(secs, 2),
+                        "n_jobs": len(jobs),
+                        "spot_nodes": n_spot}}
+
+
+def parity_row(cache, smoke: bool) -> dict:
+    """Incremental vs full pass engine, bit-exact, under combined node
+    failures + spot churn.  This is the gate that capacity-change dirty
+    sets keep the incremental indices truthful."""
+    n_reg = 3 if smoke else 5
+    n_jobs = 8 if smoke else 20
+    cluster_a, cluster_b = Cluster(n_nodes=n_reg), Cluster(n_nodes=n_reg)
+    spot_a = cluster_a.add_spot_nodes(1)
+    cluster_b.add_spot_nodes(1)
+    jobs = trace.philly(n_jobs=n_jobs, hours=4, seed=13, variant="base",
+                        load_scale=3.0)
+    cap = (trace.failure_storm(n_reg, HORIZON_S, seed=21,
+                               mtbf_s=6 * 3600.0, mttr_s=1800.0,
+                               storm=(3600.0, 5 * 3600.0, 8.0))
+           + trace.spot_churn(spot_a, HORIZON_S, seed=22,
+                              period_s=6 * 3600.0, window_frac=0.5,
+                              jitter_s=600.0))
+    cap.sort(key=lambda e: e.time)
+    inc, _ = _run(cluster_a, jobs, cache, engine="incremental",
+                  capacity=cap)
+    full, _ = _run(cluster_b, jobs, cache, engine="full", capacity=cap)
+    fp = (inc.jcts, inc.makespan, inc.n_reconfig, inc.n_events,
+          inc.guarantee_violations, inc.n_cap_events,
+          inc.n_shrink_recover, inc.n_kill_requeue)
+    fq = (full.jcts, full.makespan, full.n_reconfig, full.n_events,
+          full.guarantee_violations, full.n_cap_events,
+          full.n_shrink_recover, full.n_kill_requeue)
+    return {"name": "failures/parity", "derived": {
+        "engines": "incremental|full x event",
+        "n_jobs": len(jobs),
+        "n_cap_events": inc.n_cap_events,
+        "avg_jct_h": round(inc.avg_jct / 3600, 4),
+        "decision_parity": bool(fp == fq)}}
+
+
+def run(smoke: bool = False) -> list[dict]:
+    cache = _artifacts.prewarmed_fit_cache()
+    rows = storm_rows(cache, smoke)
+    rows.append(spot_row(cache, smoke))
+    rows.append(parity_row(cache, smoke))
+    _artifacts.write_bench_json("failures", rows, extra={
+        "smoke": smoke, "sanitize": sanitize_enabled()})
+    return rows
+
+
+def main(argv: list[str]) -> int:
+    smoke = "--smoke" in argv
+    rows = run(smoke=smoke)
+    by_name = {}
+    for row in rows:
+        print(row["name"], row["derived"])
+        by_name[row["name"]] = row["derived"]
+    if not by_name["failures/parity"]["decision_parity"]:
+        print("FAIL: incremental != full under capacity churn",
+              file=sys.stderr)
+        return 1
+    if by_name["failures/spot_churn"]["n_cap_events"] <= 0:
+        print("FAIL: spot churn injected no capacity events",
+              file=sys.stderr)
+        return 1
+    if not smoke:
+        vs = by_name["failures/shrink_vs_kill"]
+        if not vs["pass_shrink_beats_kill"]:
+            print(f"FAIL: shrink does not beat kill "
+                  f"(jct {vs['jct_shrink_h']} vs {vs['jct_kill_h']} h, "
+                  f"viol {vs['viol_shrink']} vs {vs['viol_kill']})",
+                  file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -34,6 +34,7 @@ BENCHES = [
     "bench_sched_scale",
     "bench_calibration",
     "bench_roofline",
+    "bench_failures",
 ]
 
 

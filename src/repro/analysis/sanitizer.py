@@ -87,6 +87,7 @@ class SchedSanitizer:
         self._snap = None
         running = [j for j in active if j.status == "running"]
         self._check_capacity(running, cluster)
+        self._check_dead_nodes(running, cluster, ctx)
         self._check_rollback_aliasing(active, snap)
         self._check_beneficiary(active, snap)
         self._check_quota(running, scheduler)
@@ -122,6 +123,35 @@ class SchedSanitizer:
                     f"(g={g}, c={c}, m={m:.3e}) vs caps "
                     f"(g={node.gpus}, c={node.cpus}, m={node.mem:.3e})",
                     ("placement",))
+
+    def _check_dead_nodes(self, running: list, cluster, ctx) -> None:
+        """Failure & elasticity invariants: no running placement may
+        reference a down node (the capacity-loss path must evict every
+        resident), and a down node's freed capacity must be fully folded
+        out of the incremental usage map (a leaked entry re-blocks the
+        node forever after it recovers)."""
+        down = {n.id for n in cluster.nodes if not n.up}
+        if not down:
+            return
+        for js in running:
+            for nid in js.placement:
+                if nid in down:
+                    raise SanitizerViolation(
+                        "dead-node-placement",
+                        f"job {js.job.name} still holds "
+                        f"{js.placement[nid]} on down node {nid} — the "
+                        "capacity-loss path failed to evict it",
+                        ("placement", "up"))
+        if ctx is not None:
+            for nid in down:
+                g, c, m = ctx.used.get(nid, (0, 0, 0.0))
+                if g or c or m > 1e-3:
+                    raise SanitizerViolation(
+                        "dead-node-usage",
+                        f"ctx.used[{nid}] = (g={g}, c={c}, m={m:.3e}) "
+                        f"but node {nid} is down — eviction leaked the "
+                        "usage-map entry",
+                        ("used", "up"))
 
     def _check_rollback_aliasing(self, active: list, snap: dict) -> None:
         """A job whose post-pass assignment equals its pre-pass one must

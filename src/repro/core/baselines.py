@@ -99,7 +99,11 @@ class _FixedPlanScheduler(RubickScheduler):
             self._gang_failed = set()
             self._gang_pins = {}
             self._gang_cluster = weakref.ref(cluster)
-        elif events.completed:
+        elif events.completed or events.node_down or events.node_up \
+                or events.evicted:
+            # freed capacity (completion, node recovery / spot arrival)
+            # can place a memoized failure; lost capacity changes the
+            # cluster state the memo was computed against either way
             self._gang_failed.clear()
             self._gang_pins.clear()
         elif events.refit:

@@ -5,7 +5,16 @@ Clusters may be heterogeneous: every node carries a ``gpu_model`` tag, and
 ``Cluster.envs`` maps each tag to the per-type ``Env`` (bandwidth tiers,
 device memory, compute rate — see ``perfmodel.GPU_TYPES``).  A homogeneous
 cluster has an empty ``envs`` dict and a single anonymous type group, so
-schedulers written against type groups behave exactly as before."""
+schedulers written against type groups behave exactly as before.
+
+Capacity is dynamic (failure & elasticity engine): every node carries an
+``up`` flag flipped by fault-injection / spot-capacity events
+(``trace.CapacityEvent`` applied by the simulator).  A down node offers
+zero free resources (``Node.free``) and may hold no placements
+(``check_capacity``).  ``spot`` marks preemptible nodes — created down
+via ``add_spot_nodes`` and brought up/revoked by the spot process.  Node
+GEOMETRY stays static for the whole run (``total_gpus`` keys curve
+envelopes and grow targets); ``live_gpus`` is the current capacity."""
 
 from __future__ import annotations
 
@@ -23,8 +32,12 @@ class Node:
     cpus: int = 96
     mem: float = 1600e9
     gpu_model: str = ""              # "" = the cluster's default type
+    up: bool = True                  # flipped by capacity events mid-run
+    spot: bool = False               # preemptible (spot-arrive/spot-revoke)
 
     def free(self, used: dict[int, tuple[int, int, float]]) -> tuple[int, int, float]:
+        if not self.up:
+            return 0, 0, 0.0
         g = c = 0
         m = 0.0
         if self.id in used:
@@ -53,8 +66,32 @@ class Cluster:
         return self._total_gpus
 
     @property
+    def live_gpus(self) -> int:
+        """GPUs on up nodes right now (``total_gpus`` is static geometry)."""
+        return sum(n.gpus for n in self.nodes if n.up)
+
+    @property
     def is_hetero(self) -> bool:
         return bool(self.envs)
+
+    def add_spot_nodes(self, n: int, gpus_per_node: int | None = None,
+                       gpu_model: str = "") -> list[int]:
+        """Append ``n`` preemptible nodes (initially DOWN — a spot-arrive
+        event brings each up).  Must be called before the first scheduler
+        pass: node ids stay dense and geometry is frozen afterwards.
+        Returns the new node ids (feed them to ``trace.spot_churn``)."""
+        ids = []
+        for _ in range(n):
+            nid = len(self.nodes)
+            self.nodes.append(Node(nid, gpus_per_node or self.gpus_per_node,
+                                   self.cpus_per_node, self.mem_per_node,
+                                   gpu_model=gpu_model, up=False, spot=True))
+            ids.append(nid)
+        if gpu_model and gpu_model not in self.envs:
+            self.envs[gpu_model] = env_for_gpu(gpu_model)
+        self._groups = None
+        self._total_gpus = None
+        return ids
 
     def env_for(self, nid: int, default: Env | None = None) -> Env | None:
         """Per-type Env of one node (``default`` for untagged nodes)."""
@@ -131,6 +168,13 @@ class SchedEvents:
     completed: "list[tuple[JobState, Placement]]" = field(default_factory=list)
     # (job with js.fitted already swapped to the NEW params, old params)
     refit: "list[tuple[JobState, FitParams]]" = field(default_factory=list)
+    # capacity deltas (failure & elasticity engine): node ids that went
+    # down / came up since the last pass, and capacity-loss victims with
+    # their PRE-loss placement (the engine has already run the recovery
+    # policy: js.placement is the surviving remainder, or {} if killed)
+    node_down: "list[int]" = field(default_factory=list)
+    node_up: "list[int]" = field(default_factory=list)
+    evicted: "list[tuple[JobState, Placement]]" = field(default_factory=list)
 
 
 @dataclass
@@ -148,6 +192,9 @@ class JobState:
     run_time: float = 0.0                # aggregated running seconds
     min_res: tuple[int, int] | None = None   # (gpus, cpus) minRes
     baseline_perf: float = 0.0           # samples/s with requested+orig plan
+    pause_until: float = 0.0             # checkpoint-resume pause deadline
+    ckpt_progress: float = 0.0           # iterations safely checkpointed
+    needs_restore: bool = False          # next start must pay a restore pause
 
     @property
     def total_gpus(self) -> int:
@@ -190,5 +237,7 @@ def check_capacity(cluster: Cluster, jobs: list[JobState]) -> bool:
     for node in cluster.nodes:
         g, c, m = used.get(node.id, (0, 0, 0.0))
         if g > node.gpus or c > node.cpus or m > node.mem + 1e-3:
+            return False
+        if not node.up and (g > 0 or c > 0 or m > 1e-3):
             return False
     return True

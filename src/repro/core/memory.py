@@ -29,6 +29,25 @@ C_ACT = 34.0          # bytes/token/hidden/layer without GC (bf16 copies)
 C_ACT_GC = 2.0        # checkpointed boundaries
 FRAMEWORK_OVERHEAD = 4e9
 
+# checkpoint-restore cost model (failure & elasticity engine): a restart
+# reloads weights (2 B/param) + optimizer states (fp32 master + Adam m,v,
+# 12 B/param) from shared storage — grads are not checkpointed
+CKPT_BYTES_PER_PARAM = 14.0
+RESTORE_BANDWIDTH = 4e9       # bytes/s aggregate read from shared storage
+RESTORE_OVERHEAD_S = 8.0      # process respawn + NCCL re-init floor
+
+
+def ckpt_state_bytes(profile: ModelProfile) -> float:
+    """Bytes a periodic checkpoint of this model persists (all shards)."""
+    return CKPT_BYTES_PER_PARAM * profile.P
+
+
+def restore_seconds(nbytes: float) -> float:
+    """Seconds to restore ``nbytes`` of checkpoint state (same model for
+    simulated restarts and ``checkpoint.restore_cost_estimate`` on real
+    pytrees)."""
+    return nbytes / RESTORE_BANDWIDTH + RESTORE_OVERHEAD_S
+
 
 @dataclass(frozen=True)
 class MemEstimate:

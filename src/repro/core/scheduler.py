@@ -71,6 +71,11 @@ class SchedulerConfig:
     # ablation switches (Rubick-E / -R / -N variants, Sec 7.3)
     reconfigure_plans: bool = True
     reallocate_resources: bool = True
+    # capacity-loss recovery policy (failure & elasticity engine):
+    # "shrink" re-plans the victim over its surviving resources via
+    # best_plan_at_most and only kills when nothing feasible survives;
+    # "kill" is the classic checkpoint-restart baseline (always requeue)
+    recovery: str = "shrink"
     # plan-evaluation engine: "batch" (vectorized) or "scalar" (reference)
     curve_engine: str = "batch"
     # scheduling-pass engine: "incremental" (index-driven, default) or
@@ -206,6 +211,8 @@ class _PassCtx:
     def apply_events(self, events: SchedEvents, sched) -> None:
         for js, freed in events.completed:
             self.remove(js, freed, sched)
+        if events.node_down or events.node_up or events.evicted:
+            self.apply_capacity(events, sched)
         if sched.quotas:
             for js in events.arrived:
                 # a new same-tenant reservation changes quota room, which
@@ -247,6 +254,48 @@ class _PassCtx:
                             if s[1] not in stale}
         self.parked_pins = {s: pin for s, pin in self.parked_pins.items()
                             if s in self.parked_sigs}
+
+    def apply_capacity(self, events: SchedEvents, sched) -> None:
+        """Capacity changed between passes (node failure / recovery, spot
+        arrive / revoke): fold every victim's lost share out of the usage
+        map, drop it from the resident index of nodes it no longer
+        occupies, and version-bump every touched node — which both
+        invalidates its victim cache and wakes parked walks subscribed to
+        the node or its GPU-type group.  The quota ledger is rebuilt each
+        pass from live placements (build_ledger), so eviction needs no
+        cross-pass ledger repair beyond waking quota subscribers."""
+        for nid in events.node_down:
+            self.bump_node(nid)
+        for nid in events.node_up:
+            self.bump_node(nid)
+        for js, before in events.evicted:
+            jid = id(js)
+            if jid not in self.members:
+                continue
+            after = js.placement
+            for nid in sorted(set(before) | set(after)):
+                b = before.get(nid, (0, 0, 0.0))
+                a = after.get(nid, (0, 0, 0.0))
+                if b != a:
+                    u = self.used.get(nid, (0, 0, 0.0))
+                    self.used[nid] = (u[0] - b[0] + a[0], u[1] - b[1] + a[1],
+                                      u[2] - b[2] + a[2])
+                if a[0] <= 0:
+                    res = self.by_node.get(nid)
+                    if res is not None:
+                        try:
+                            res.remove(js)
+                        except ValueError:
+                            pass
+                self.bump_node(nid)
+            # the victim's slope/assignment changed: re-sort it, forget
+            # its parked walk outcome, let the reconfig gate re-evaluate
+            self.dirty.add(jid)
+            self.parked_running.discard(jid)
+            self.gate_wake.pop(jid, None)
+            if js.job.guaranteed \
+                    and sched.quotas.get(js.job.tenant) is not None:
+                self.bump_quota(js.job.tenant)
 
     def prune(self, cluster: Cluster) -> None:
         """Compact soft resident lists that accumulated stale entries
@@ -654,10 +703,28 @@ class RubickScheduler:
             self._victim_seq = {id(j): i for i, j in enumerate(active)}
 
         # --- lines 2-3: privileged queued guaranteed jobs within quota ----
+        # Degraded running guaranteed jobs — shrunk below minRes by the
+        # failure-recovery path — share this class: their guarantee is
+        # violated right now, exactly like a capacity-evicted queued job
+        # (which kill-and-requeue would put here), so regrowth must not
+        # lose capacity races to later-submitted admissions.
         queued_g = [j for j in active if j.status == "queued"
                     and j.job.guaranteed]
+        for j in active:
+            if j.status == "running" and j.job.guaranteed and j.min_res \
+                    and j.total_gpus < j.min_res[0]:
+                queued_g.append(j)
         queued_g.sort(key=lambda j: j.job.submit)
         for js in queued_g:
+            if js.status == "running":
+                # growth path enforces quota via the growth budget; the
+                # parked-walk skip mirrors the slope-phase check below
+                # (no gate_wake skip: degraded jobs bypass the gate)
+                if ctx is not None and id(js) in ctx.parked_running:
+                    continue
+                self._schedule_job(js, active, cluster, now, used, by_node,
+                                   ctx)
+                continue
             sig = None
             if ctx is not None:
                 sig = ctx.sig_for(js)
@@ -840,7 +907,15 @@ class RubickScheduler:
         # new assignment can be committed, so never shrink victims for it
         # — and the gate's opening time is deterministic, so the job can
         # be parked until then (incremental engine)
-        if js.status == "running" and not self._reconfig_gate(js):
+        # A degraded guaranteed job (shrunk below minRes by failure
+        # recovery) bypasses the gate: restoring a violated guarantee is
+        # the same restart kill-and-requeue performs through the ungated
+        # admission path, so gating it here would bias recovery-policy
+        # comparisons against shrink.
+        degraded = js.status == "running" and js.job.guaranteed \
+            and js.min_res is not None and js.total_gpus < js.min_res[0]
+        if js.status == "running" and not degraded \
+                and not self._reconfig_gate(js):
             if ctx is not None:
                 ctx.park_gate(js, self, now)
             return
@@ -878,15 +953,27 @@ class RubickScheduler:
             target_g = self._target_gpus(js, curve, cluster, active, ctx)
             if target_g <= 0:
                 return
-            wu = dict(base)              # walk-local copy, mutated by shrinks
-            placement, got_g, got_c, shrunk = self._walk_group(
-                js, by_node, nodes, cluster, env, curve, target_g, min_g,
-                wu, ctx)
-            # lines 19-24: commit if ≥ minRes
+            # the greedy node-order walk can collect a ragged geometry
+            # (e.g. 4+8+4) that best_plan_at_most cannot realize even
+            # though whole free nodes exist; when it fails to commit,
+            # retry once with nodes ordered most-free-first (attempted
+            # ONLY on failure, so every walk that used to succeed is
+            # byte-identical)
             was = (js.status, js.plan, js.alloc, js.placement)
-            if got_g >= max(min_g, 1) and self._commit(
-                    js, curve, env, cluster, wu, placement,
-                    got_g, got_c, now):
+            committed = False
+            for try_nodes in self._walk_orders(nodes, base):
+                wu = dict(base)          # walk-local copy, mutated by shrinks
+                placement, got_g, got_c, shrunk = self._walk_group(
+                    js, by_node, try_nodes, cluster, env, curve, target_g,
+                    min_g, wu, ctx)
+                # lines 19-24: commit if ≥ minRes
+                if got_g >= max(min_g, 1) and self._commit(
+                        js, curve, env, cluster, wu, placement,
+                        got_g, got_c, now):
+                    committed = True
+                    break
+                self._undo(shrunk, ctx)
+            if committed:
                 if used is not None:
                     # fold the walk's surviving shrinks + the new placement
                     # back into the pass-wide usage map + resident index
@@ -921,7 +1008,6 @@ class RubickScheduler:
                 elif failed is not None and changed:
                     failed.clear()       # cluster state changed
                 return
-            self._undo(shrunk, ctx)
         if ctx is not None:
             # record the failure post-rollback (cluster state again equals
             # what the walk read): identical state → skip the re-walk
@@ -932,6 +1018,19 @@ class RubickScheduler:
             # every pass and the signature referents outlive the pass via
             # the caller's jobs list
             failed.add(sig)
+
+    @staticmethod
+    def _walk_orders(nodes: list, base: dict):
+        """Walk orderings for one GPU-type group: the canonical node order
+        first, then (only reached when that walk failed to commit) the
+        same nodes most-free-first — whole free nodes before scraps, so a
+        multi-node job gets a geometry ``best_plan_at_most`` can realize.
+        Deterministic: free GPUs descending, node id ascending."""
+        yield nodes
+        alt = sorted(nodes, key=lambda n: (
+            -(n.gpus - base.get(n.id, (0, 0, 0.0))[0]), n.id))
+        if [n.id for n in alt] != [n.id for n in nodes]:
+            yield alt
 
     def _group_order(self, js: JobState, cluster: Cluster,
                      ) -> list[tuple[list, Env]]:
@@ -1126,6 +1225,63 @@ class RubickScheduler:
             return None
         return plan
 
+    # ------------------------------------------------------------------
+    # capacity-loss recovery (failure & elasticity engine)
+    # ------------------------------------------------------------------
+    def recover(self, js: JobState, active: list[JobState],
+                cluster: Cluster, lost: set[int], now: float) -> str:
+        """Recovery policy for one running job that just lost the nodes in
+        ``lost``: re-plan over the SURVIVING slice of its placement via
+        ``best_plan_at_most`` (``_fixed_plan`` for DP-only elasticity when
+        plan reconfiguration is off), falling back to kill-and-requeue
+        when nothing feasible survives — or always, under the
+        ``recovery="kill"`` checkpoint-restart baseline.
+
+        Mutates ``js`` exactly like ``_commit`` (fresh placement dict) and
+        returns "shrunk" or "killed"; the simulator charges the restore
+        pause and rolls progress back to the last checkpoint either way.
+        Shrinking below minRes intentionally beats killing here: a
+        degraded guaranteed job keeps making progress, and the guarantee-
+        violation metric charges the degradation.  No reconfiguration gate
+        — the reconfiguration is forced, not elective."""
+        surv = {nid: r for nid, r in js.placement.items() if nid not in lost}
+        got_g = sum(g for g, _, _ in surv.values())
+        got_c = sum(c for _, c, _ in surv.values())
+        elastic = self.cfg.reconfigure_plans or self.cfg.reallocate_resources
+        if self.cfg.recovery == "shrink" and elastic and got_g >= 1:
+            env = (cluster.env_for(next(iter(surv)), self.env) or self.env) \
+                if cluster.is_hetero else self.env
+            pernode = tuple(sorted((g for g, _, _ in surv.values()),
+                                   reverse=True))
+            if self.cfg.reconfigure_plans:
+                curve = self.curve(js, cluster, env)
+                pt = curve.best_plan_at_most(got_g, got_c,
+                                             gpus_per_node=pernode)
+                plan = pt.plan
+            else:
+                plan = self._fixed_plan(js, got_g, env)
+            if plan is not None:
+                alloc = Alloc(got_g, got_c, gpus_per_node=pernode)
+                est = memory.estimate(js.job.profile, plan, alloc, env)
+                host_share = est.host_bytes / max(len(surv), 1)
+                others = used_per_node([j for j in active if j is not js
+                                        and j.status == "running"])
+                fits = est.gpu_bytes <= env.gpu_mem and all(
+                    host_share <= cluster.nodes[nid].free(others)[2] + 1e-3
+                    for nid in surv)
+                if fits:
+                    js.placement = {nid: (g, c, host_share)
+                                    for nid, (g, c, _) in surv.items()}
+                    js.alloc = alloc
+                    js.plan = plan
+                    js.n_reconfig += 1
+                    return "shrunk"
+        js.status = "queued"
+        js.placement = {}
+        js.plan = None
+        js.alloc = None
+        return "killed"
+
     def _lowest_slope_over_min(self, cands, node_id: int,
                                cluster: Cluster, env: Env | None = None,
                                exclude: JobState | None = None,
@@ -1234,6 +1390,12 @@ class RubickScheduler:
 
     def _reconfig_ok(self, js: JobState, plan, alloc, now: float) -> bool:
         if plan == js.plan and alloc == js.alloc:
+            return True
+        if js.job.guaranteed and js.min_res is not None \
+                and js.total_gpus < js.min_res[0]:
+            # degraded by failure recovery: regaining minRes is the same
+            # restart kill-and-requeue performs through the ungated
+            # admission path — never amortization-gate it
             return True
         return self._reconfig_gate(js)
 

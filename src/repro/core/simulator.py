@@ -43,6 +43,22 @@ refit in ``SchedEvents.refit`` so BOTH pass engines invalidate their
 identity-keyed state (incremental ≡ full stays bit-exact across refits).
 With a ``drifting=True`` oracle, telemetry events also re-measure running
 jobs (the truth moves between assignments) and re-arm their completions.
+
+Failure & elasticity engine: pass ``capacity`` (a list of
+``trace.CapacityEvent``) and both engines kill/restore nodes mid-run via
+EV_NODE_FAIL / EV_NODE_RECOVER / EV_SPOT_ARRIVE / EV_SPOT_REVOKE heap
+events.  A node loss evicts every resident job through the scheduler's
+recovery policy (``RubickScheduler.recover``: shrink onto the surviving
+placement via ``best_plan_at_most``, kill-and-requeue when nothing
+feasible survives — or always, under ``cfg.recovery="kill"``), rolls its
+progress back to the last checkpoint (periodic every ``ckpt_interval``
+seconds; revoke-with-warning drains to a clean checkpoint first and
+loses nothing), and charges a restore pause from the checkpoint-state
+size (``memory.ckpt_state_bytes`` / ``memory.restore_seconds`` — the
+same model ``checkpoint.restore_cost_estimate`` applies to real
+pytrees).  The scheduler pass at a capacity event receives the deltas in
+``SchedEvents`` (node_down / node_up / evicted) so the incremental pass
+engine folds lost capacity out of its persistent indices.
 """
 
 from __future__ import annotations
@@ -58,6 +74,7 @@ import numpy as np
 from repro.core.cluster import (Cluster, Job, JobState, SchedEvents,
                                 check_capacity)
 from repro.core.fitting import fit_batch
+from repro.core.memory import ckpt_state_bytes, restore_seconds
 from repro.core.oracle import (AnalyticOracle, profiling_requests,
                                profiling_samples)
 from repro.core.perfmodel import Env, FitParams, fit, fit_key
@@ -69,10 +86,18 @@ from repro.core.sensitivity import get_curve
 # noise so only genuine under-allocation counts.
 GUARANTEE_TOL = 0.1
 
-# event kinds, in tie-break order at one instant: arrivals and completions
-# (the state changes) are folded into a single scheduler pass, then pause
-# expiries resume jobs, then telemetry samples the settled state
-EV_ARRIVAL, EV_COMPLETION, EV_PAUSE_END, EV_TELEMETRY = 0, 1, 2, 3
+# event kinds, in tie-break order at one instant: arrivals, completions
+# and capacity changes (the state changes) are folded into a single
+# scheduler pass, then pause expiries resume jobs, then telemetry samples
+# the settled state
+EV_ARRIVAL, EV_COMPLETION = 0, 1
+EV_NODE_FAIL, EV_NODE_RECOVER, EV_SPOT_ARRIVE, EV_SPOT_REVOKE = 2, 3, 4, 5
+EV_PAUSE_END, EV_TELEMETRY = 6, 7
+
+# CapacityEvent.kind label -> heap event kind (unknown labels dispatch on
+# the event's ``down`` flag — the semantics live there, kinds are labels)
+_CAP_EV = {"fail": EV_NODE_FAIL, "recover": EV_NODE_RECOVER,
+           "spot-arrive": EV_SPOT_ARRIVE, "spot-revoke": EV_SPOT_REVOKE}
 
 
 @dataclass
@@ -89,6 +114,10 @@ class SimResult:
     # few feasible profiling samples) — uncalibrated until a refit
     unfitted: list[str] = field(default_factory=list)
     n_refits: int = 0                 # online calibration refits applied
+    # failure & elasticity counters
+    n_cap_events: int = 0             # capacity events applied
+    n_shrink_recover: int = 0         # evictions survived by shrinking
+    n_kill_requeue: int = 0           # evictions that killed-and-requeued
 
     @property
     def avg_jct(self) -> float:
@@ -111,6 +140,10 @@ class SimResult:
             out["unfitted_models"] = list(self.unfitted)
         if self.n_refits:
             out["n_refits"] = self.n_refits
+        if self.n_cap_events:
+            out["n_cap_events"] = self.n_cap_events
+            out["n_shrink_recover"] = self.n_shrink_recover
+            out["n_kill_requeue"] = self.n_kill_requeue
         for cls, vals in self.jct_by_class.items():
             out[f"avg_jct_{cls}_h"] = float(np.mean(vals)) / 3600 if vals else 0
         return out
@@ -120,7 +153,9 @@ class Simulator:
     def __init__(self, cluster: Cluster, scheduler, oracle=None,
                  env: Env | None = None, reconfig_cost: float = 78.0,
                  fit_cache: dict | None = None, mode: str = "event",
-                 calibration=None, telemetry_interval: float = 300.0):
+                 calibration=None, telemetry_interval: float = 300.0,
+                 capacity: list | None = None,
+                 ckpt_interval: float = 1800.0):
         self.cluster = cluster
         self.scheduler = scheduler
         self.env = env or Env()
@@ -128,6 +163,10 @@ class Simulator:
         self.reconfig_cost = reconfig_cost
         self.fit_cache = fit_cache if fit_cache is not None else {}
         self.mode = mode
+        # capacity dynamics (trace.CapacityEvent list) + periodic-
+        # checkpoint cadence bounding the work a hard failure loses
+        self.capacity = capacity
+        self.ckpt_interval = ckpt_interval
         # online calibration (repro.calibration.CalibrationManager or any
         # object with ensure/observe/poll); None = telemetry disabled
         self.calibration = calibration
@@ -267,6 +306,84 @@ class Simulator:
                           engine=getattr(cfg, "curve_engine", "batch"))
 
     # ------------------------------------------------------------------
+    # capacity dynamics (failure & elasticity engine) — shared by both
+    # simulation engines
+    # ------------------------------------------------------------------
+    def _restore_cost(self, profile) -> float:
+        """Seconds a restart from the last checkpoint costs: reload
+        weights + optimizer states from shared storage (the same model
+        ``checkpoint.restore_cost_estimate`` applies to real pytrees)."""
+        return restore_seconds(ckpt_state_bytes(profile))
+
+    def _apply_capacity(self, batch, active: list[JobState],
+                        now: float) -> tuple[list[int], list[int], list]:
+        """Apply one instant's capacity events: flip node availability,
+        then run the recovery policy over every running resident of a
+        lost node.  Returns ``(down_ids, up_ids, affected)`` where
+        ``affected`` holds ``(job, pre-loss placement, outcome)`` — the
+        engine-specific bookkeeping (completion re-arming, pause events,
+        SchedEvents deltas) happens at the call sites."""
+        cluster = self.cluster
+        down: list[int] = []
+        up: list[int] = []
+        graceful: set[int] = set()
+        for ce in batch:
+            node = cluster.nodes[ce.node]
+            if ce.down:
+                if node.up:
+                    node.up = False
+                    down.append(ce.node)
+                    if ce.warning_s > 0.0:
+                        graceful.add(ce.node)
+            elif not node.up:
+                node.up = True
+                up.append(ce.node)
+        affected = []
+        if down:
+            down_set = set(down)
+            for s in active:
+                if s.status == "running" and down_set & s.placement.keys():
+                    affected.append(self._evict_resident(
+                        s, active, down_set, graceful, now))
+        return down, up, affected
+
+    def _evict_resident(self, s: JobState, active: list[JobState],
+                        down_set: set[int], graceful: set[int],
+                        now: float) -> tuple:
+        """Recovery for ONE running job that lost nodes: roll progress
+        back to the last checkpoint (a graceful revoke drained to a clean
+        checkpoint during its warning — nothing lost; a hard failure
+        loses up to ``ckpt_interval`` of work), delegate the placement
+        decision to the scheduler's recovery policy, and charge the
+        checkpoint-restore pause (shrunk jobs pause in place; killed jobs
+        pay it on their next start via ``needs_restore``)."""
+        before = dict(s.placement)
+        if down_set & before.keys() <= graceful:
+            s.ckpt_progress = s.progress     # drained during the warning
+        else:
+            th = self._true_throughput(s, now)
+            lag = th * self.ckpt_interval / s.job.profile.b
+            s.progress = max(s.ckpt_progress, s.progress - lag)
+            s.ckpt_progress = s.progress
+        rec = getattr(self.scheduler, "recover", None)
+        if rec is not None:
+            outcome = rec(s, active, self.cluster, down_set, now)
+        else:
+            s.status = "queued"
+            s.placement = {}
+            s.plan = None
+            s.alloc = None
+            outcome = "killed"
+        if outcome == "shrunk":
+            s.pause_until = max(s.pause_until,
+                                now + self._restore_cost(s.job.profile))
+            s.needs_restore = False
+        else:
+            s.pause_until = 0.0
+            s.needs_restore = True
+        return s, before, outcome
+
+    # ------------------------------------------------------------------
     def run(self, jobs: list[Job], max_time: float = 7 * 86400.0,
             mode: str | None = None) -> SimResult:
         mode = mode or self.mode
@@ -288,18 +405,23 @@ class Simulator:
         heap: list[tuple[float, int, int, object]] = []
         for s in states:
             heapq.heappush(heap, (s.job.submit, EV_ARRIVAL, next(seq), s))
+        for ce in (self.capacity or []):
+            kind = _CAP_EV.get(ce.kind,
+                               EV_NODE_FAIL if ce.down else EV_NODE_RECOVER)
+            heapq.heappush(heap, (ce.time, kind, next(seq), ce))
         if cal is not None and states:
             heapq.heappush(heap, (self.telemetry_interval, EV_TELEMETRY,
                                   next(seq), None))
 
         active: list[JobState] = []        # arrived, not yet done
         done: list[JobState] = []
+        n_pending = len(states)            # arrivals still in the heap
         # id(s)-keyed run-local maps: every key's referent is pinned by
         # ``states`` for the whole run
-        pause_until: dict[int, float] = {}
         epoch: dict[int, int] = {}         # completion-event invalidation
         thpt: dict[int, float] = {}        # oracle samples/s per assignment
         violations = n_events = n_sched = n_refits = 0
+        n_cap = n_shrink = n_kill = 0
         t = 0.0
         san = self._san
 
@@ -316,7 +438,7 @@ class Simulator:
                     continue
                 old = (s.run_time, s.progress)
                 s.run_time += dt           # wall-clock incl. reconfig pause
-                pu = pause_until.get(id(s), 0.0)
+                pu = s.pause_until
                 eff = dt if pu <= t else to - pu
                 if eff > 0.0:
                     s.progress += thpt.get(id(s), 0.0) * eff \
@@ -336,20 +458,30 @@ class Simulator:
                 return
             remain = (s.job.target_iters - s.progress) \
                 * s.job.profile.b / th
-            start = max(now, pause_until.get(id(s), 0.0))
+            start = max(now, s.pause_until)
             heapq.heappush(heap, (start + max(remain, 0.0),
                                   EV_COMPLETION, next(seq), (s, e)))
 
         def check_guarantee(s: JobState, now: float) -> int:
-            th = thpt.get(id(s), 0.0)
-            if (s.status == "running"
-                    and pause_until.get(id(s), 0.0) <= now
-                    and s.job.guaranteed and s.baseline_perf > 0.0
-                    and th < s.baseline_perf * (1.0 - GUARANTEE_TOL)):
+            if not s.job.guaranteed or s.baseline_perf <= 0.0:
+                return 0
+            if s.status == "running" and s.pause_until <= now:
+                th = thpt.get(id(s), 0.0)
+                return 1 if th < s.baseline_perf * (1.0 - GUARANTEE_TOL) \
+                    else 0
+            if s.status == "queued" and s.start_time is not None:
+                # an admitted guaranteed job evicted by a capacity loss
+                # runs at zero throughput until re-admitted — that counts
+                # against its guarantee exactly like under-allocation
+                # (no existing path requeues a started guaranteed job,
+                # so this clause is inert on failure-free traces)
                 return 1
             return 0
 
         while heap:
+            if not active and n_pending == 0:
+                break                      # drained: only capacity /
+                                           # telemetry events remain
             t_ev = heap[0][0]
             if t_ev > max_time:
                 break
@@ -362,15 +494,20 @@ class Simulator:
             state_changed = False
             tel_due = False
             resumed: list[JobState] = []
+            cap_batch: list = []
             # event-scoped dirty sets: the incremental scheduler engine
             # updates its persistent indices from exactly what changed
             ev_arrived: list[JobState] = []
             ev_completed: list[tuple] = []
             ev_refit: list[tuple] = []
+            ev_down: list[int] = []
+            ev_up: list[int] = []
+            ev_evicted: list[tuple] = []
             for _, kind, _, payload in batch:
                 if kind == EV_ARRIVAL:
                     active.append(payload)
                     ev_arrived.append(payload)
+                    n_pending -= 1
                     state_changed = True
                 elif kind == EV_COMPLETION:
                     s, e = payload
@@ -386,13 +523,35 @@ class Simulator:
                     active.remove(s)
                     done.append(s)
                     state_changed = True
+                elif EV_NODE_FAIL <= kind <= EV_SPOT_REVOKE:
+                    cap_batch.append(payload)
                 elif kind == EV_PAUSE_END:
                     s = payload
                     if s.status == "running" \
-                            and pause_until.get(id(s), 0.0) <= t + 1e-9:
+                            and s.pause_until <= t + 1e-9:
                         resumed.append(s)
                 else:                                  # EV_TELEMETRY
                     tel_due = True
+
+            if cap_batch:
+                ev_down, ev_up, affected = self._apply_capacity(
+                    cap_batch, active, t)
+                n_cap += len(ev_down) + len(ev_up)
+                for s, before, outcome in affected:
+                    ev_evicted.append((s, before))
+                    if outcome == "shrunk":
+                        n_shrink += 1
+                        # restore pause charged in place; completion
+                        # re-armed from the shrunk assignment
+                        heapq.heappush(heap, (s.pause_until, EV_PAUSE_END,
+                                              next(seq), s))
+                        resample(s, t)
+                    elif outcome == "killed":
+                        n_kill += 1
+                        epoch[id(s)] = epoch.get(id(s), 0) + 1
+                        thpt.pop(id(s), None)
+                if ev_down or ev_up or ev_evicted:
+                    state_changed = True
 
             if tel_due:
                 # periodic telemetry: sample every running unpaused job.
@@ -402,8 +561,7 @@ class Simulator:
                 # cached per-assignment sample is still exact — record it
                 # without touching simulation dynamics.
                 for s in active:
-                    if s.status != "running" \
-                            or pause_until.get(id(s), 0.0) > t:
+                    if s.status != "running" or s.pause_until > t:
                         continue
                     if self._drifting:
                         resample(s, t)
@@ -427,7 +585,10 @@ class Simulator:
                         active, self.cluster, t,
                         events=SchedEvents(arrived=ev_arrived,
                                            completed=ev_completed,
-                                           refit=ev_refit))
+                                           refit=ev_refit,
+                                           node_down=ev_down,
+                                           node_up=ev_up,
+                                           evicted=ev_evicted))
                 else:
                     self.scheduler.schedule(active, self.cluster, t)
                 n_sched += 1
@@ -437,11 +598,26 @@ class Simulator:
                     was = prev[id(s)]
                     if s.status == "running":
                         if was[2] != "running":        # (re)started
+                            if s.needs_restore:
+                                # killed by a capacity loss: the restart
+                                # reloads the checkpoint before training
+                                s.needs_restore = False
+                                s.pause_until = max(
+                                    s.pause_until,
+                                    t + self._restore_cost(s.job.profile))
+                                heapq.heappush(heap, (s.pause_until,
+                                                      EV_PAUSE_END,
+                                                      next(seq), s))
                             resample(s, t)
                         elif (s.plan, s.alloc) != was[:2]:
-                            # lint: unscoped-id — run-local; pinned above
-                            pause_until[id(s)] = t + self.reconfig_cost
-                            heapq.heappush(heap, (t + self.reconfig_cost,
+                            # checkpoint-resume: the reconfiguration saves
+                            # a checkpoint, so a later failure rolls back
+                            # at most to here.  max() keeps a restore
+                            # pause charged this instant from shrinking.
+                            s.ckpt_progress = s.progress
+                            s.pause_until = max(s.pause_until,
+                                                t + self.reconfig_cost)
+                            heapq.heappush(heap, (s.pause_until,
                                                   EV_PAUSE_END, next(seq),
                                                   s))
                             resample(s, t)
@@ -454,7 +630,7 @@ class Simulator:
                     elif was[2] == "running":          # preempted
                         epoch[id(s)] = epoch.get(id(s), 0) + 1
                         thpt.pop(id(s), None)
-                        pause_until.pop(id(s), None)
+                        s.pause_until = 0.0
                 # performance-guarantee accounting (paper Sec 5.1), sampled
                 # at every scheduling point for running unpaused jobs
                 for s in active:
@@ -465,7 +641,8 @@ class Simulator:
         self.last_states = states          # inspectable by tests/benchmarks
         return self._assemble(active + done, t, violations,
                               n_events=n_events, n_sched=n_sched,
-                              n_refits=n_refits)
+                              n_refits=n_refits, n_cap=n_cap,
+                              n_shrink=n_shrink, n_kill=n_kill)
 
     # ------------------------------------------------------------------
     # discrete-time reference loop (the original polling engine)
@@ -480,10 +657,13 @@ class Simulator:
         next_tel = self.telemetry_interval if cal is not None else math.inf
         pending: list[JobState] = list(arrivals)
         active: list[JobState] = []
-        pause_until: dict[int, float] = {}
+        cap = sorted(self.capacity or [],
+                     key=lambda e: (e.time, e.node, not e.down))
+        ci = 0
         violations = 0
         n_sched = 0
         n_refits = 0
+        n_cap = n_shrink = n_kill = 0
 
         def next_arrival() -> float:
             return pending[0].job.submit if pending else math.inf
@@ -494,24 +674,56 @@ class Simulator:
             while pending and pending[0].job.submit <= t + 1e-9:
                 active.append(pending.pop(0))
 
+            # apply due capacity events (the dt clamp below lands the loop
+            # exactly on each event time, mirroring the event engine)
+            cap_batch = []
+            while ci < len(cap) and cap[ci].time <= t + 1e-9:
+                cap_batch.append(cap[ci])
+                ci += 1
+            if cap_batch:
+                down, up, affected = self._apply_capacity(cap_batch,
+                                                          active, t)
+                n_cap += len(down) + len(up)
+                for _s, _before, outcome in affected:
+                    if outcome == "shrunk":
+                        n_shrink += 1
+                    elif outcome == "killed":
+                        n_kill += 1
+
             prev = {id(s): (s.plan, s.alloc, s.status) for s in active}
             self.scheduler.schedule(active, self.cluster, t)
             n_sched += 1
             assert check_capacity(self.cluster, active), "over-allocation"
             for s in active:
+                if s.status != "running":
+                    continue
                 was = prev.get(id(s))
-                if was and s.status == "running" and was[2] == "running" \
+                if was and was[2] == "running" \
                         and (s.plan, s.alloc) != was[:2]:
-                    # lint: unscoped-id — run-local map; keys pinned by
-                    # ``states`` for the whole run
-                    pause_until[id(s)] = t + self.reconfig_cost
+                    # checkpoint-resume: saves a checkpoint (bounds a
+                    # later failure's rollback), then pauses for δ
+                    s.ckpt_progress = s.progress
+                    s.pause_until = max(s.pause_until,
+                                        t + self.reconfig_cost)
+                elif s.needs_restore:
+                    # killed by a capacity loss, restarted this pass: the
+                    # restart reloads the checkpoint before training
+                    s.needs_restore = False
+                    s.pause_until = max(s.pause_until,
+                                        t + self._restore_cost(s.job.profile))
 
             # compute throughputs (paused jobs contribute 0 until resumed)
             thpts = {}
             for s in active:
                 if s.status != "running":
+                    # an admitted guaranteed job evicted by a capacity
+                    # loss runs at zero throughput until re-admitted —
+                    # that counts against its guarantee
+                    if (s.status == "queued" and s.start_time is not None
+                            and s.job.guaranteed and s.baseline_perf > 0.0):
+                        violations += 1
                     continue
-                if pause_until.get(id(s), 0.0) > t:
+                if s.pause_until > t:
                     # lint: unscoped-id — run-local map; keys pinned by
                     # ``states`` for the whole run
                     thpts[id(s)] = 0.0
@@ -530,8 +742,7 @@ class Simulator:
             # from the live job states every step anyway)
             if cal is not None and t + 1e-9 >= next_tel:
                 for s in active:
-                    if s.status == "running" \
-                            and pause_until.get(id(s), 0.0) <= t:
+                    if s.status == "running" and s.pause_until <= t:
                         self._observe(s, thpts.get(id(s), 0.0), t)
                 for refit in cal.poll(t):
                     self._apply_refit(refit, states,
@@ -544,10 +755,12 @@ class Simulator:
             dt = next_arrival() - t
             if cal is not None:
                 dt = min(dt, next_tel - t)     # land on telemetry ticks
+            if ci < len(cap):
+                dt = min(dt, cap[ci].time - t)  # land on capacity events
             for s in active:
                 if s.status != "running":
                     continue
-                pu = pause_until.get(id(s), 0.0)
+                pu = s.pause_until
                 if pu > t:
                     dt = min(dt, pu - t)
                     continue
@@ -573,7 +786,7 @@ class Simulator:
                     continue
                 old = (s.run_time, s.progress)
                 s.run_time += dt
-                pu = pause_until.get(id(s), 0.0)
+                pu = s.pause_until
                 eff = dt if pu <= t else t + dt - pu
                 th = 0.0
                 if eff > 0.0:
@@ -591,12 +804,14 @@ class Simulator:
 
         self.last_states = states          # inspectable by tests/benchmarks
         return self._assemble(active, t, violations, n_sched=n_sched,
-                              n_refits=n_refits)
+                              n_refits=n_refits, n_cap=n_cap,
+                              n_shrink=n_shrink, n_kill=n_kill)
 
     # ------------------------------------------------------------------
     def _assemble(self, arrived: list[JobState], t: float, violations: int,
                   n_events: int = 0, n_sched: int = 0,
-                  n_refits: int = 0) -> SimResult:
+                  n_refits: int = 0, n_cap: int = 0, n_shrink: int = 0,
+                  n_kill: int = 0) -> SimResult:
         jcts = {}
         by_class: dict[str, list[float]] = {"guaranteed": [],
                                             "best_effort": []}
@@ -615,4 +830,5 @@ class Simulator:
                          n_events=n_events, n_sched_calls=n_sched,
                          unfitted=sorted({k[0] for k in
                                           self._unfitted & keys}),
-                         n_refits=n_refits)
+                         n_refits=n_refits, n_cap_events=n_cap,
+                         n_shrink_recover=n_shrink, n_kill_requeue=n_kill)

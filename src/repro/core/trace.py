@@ -13,11 +13,20 @@ Table-2 set.  Variants:
 
 ``philly()`` scales the same generator to production shape: 500+ jobs for
 256+ GPU clusters with the Philly long-tail duration distribution.
+
+Capacity processes (failure & elasticity engine): ``failure_storm``
+draws per-node fail/repair times from exponential MTBF/MTTR (optionally
+intensified inside a storm window) and ``spot_churn`` models a diurnal
+preemptible pool (nodes arrive for an off-peak window each day, revoked
+with a warning that lets jobs checkpoint cleanly).  Both are seeded and
+return sorted ``CapacityEvent`` lists the simulator turns into heap
+events (EV_CAPACITY).
 """
 
 from __future__ import annotations
 
 import math
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -36,6 +45,91 @@ GPU_PROBS = [0.45, 0.15, 0.15, 0.13, 0.07, 0.03, 0.02]
 # type; the other half of the jobs are type-agnostic)
 HETERO_MIX = [("a800", 0.35), ("h800", 0.15), ("a100-40g", 0.25),
               ("v100", 0.25)]
+
+
+@dataclass(frozen=True)
+class CapacityEvent:
+    """One capacity change applied to a node mid-run.
+
+    ``down=True`` kills the node (EV_NODE_FAIL / EV_SPOT_REVOKE),
+    ``down=False`` restores it (EV_NODE_RECOVER / EV_SPOT_ARRIVE).
+    ``warning_s > 0`` means revoke-with-warning: residents drain to a
+    clean checkpoint during the warning, so no work is lost (hard
+    failures roll back to the last periodic checkpoint).  ``kind`` is a
+    label for accounting only — the simulator dispatches on ``down``."""
+    time: float
+    node: int
+    down: bool
+    warning_s: float = 0.0
+    kind: str = "fail"       # fail | recover | spot-arrive | spot-revoke
+
+
+def failure_storm(n_nodes: int, horizon_s: float, seed: int = 0,
+                  mtbf_s: float = 4 * 86400.0, mttr_s: float = 3600.0,
+                  storm: tuple[float, float, float] | None = None,
+                  nodes: list[int] | None = None) -> list[CapacityEvent]:
+    """Per-node exponential fail/repair process over ``[0, horizon_s)``.
+
+    ``storm=(start_s, end_s, rate_mult)`` multiplies the failure hazard
+    inside the window (a correlated failure storm — rack power loss,
+    bad driver rollout).  Candidate failures are drawn at the storm-peak
+    rate and thinned outside the window, so the process is an exact
+    non-homogeneous Poisson draw and fully determined by ``seed``."""
+    rng = np.random.default_rng(seed)
+    node_ids = list(range(n_nodes)) if nodes is None else list(nodes)
+    peak = storm[2] if storm else 1.0
+    events: list[CapacityEvent] = []
+    for nid in node_ids:
+        t = 0.0
+        while True:
+            t += float(rng.exponential(mtbf_s / peak))
+            if t >= horizon_s:
+                break
+            mult = peak if (storm and storm[0] <= t < storm[1]) else 1.0
+            if rng.random() >= mult / peak:          # thinned candidate
+                continue
+            events.append(CapacityEvent(t, nid, down=True, kind="fail"))
+            t += float(rng.exponential(mttr_s))
+            if t < horizon_s:
+                events.append(CapacityEvent(t, nid, down=False,
+                                            kind="recover"))
+    events.sort(key=lambda e: (e.time, e.node, not e.down))
+    return events
+
+
+def spot_churn(spot_nodes: list[int], horizon_s: float, seed: int = 0,
+               period_s: float = 86400.0, window_frac: float = 0.45,
+               jitter_s: float = 1800.0, warning_s: float = 120.0,
+               surprise_p: float = 0.15) -> list[CapacityEvent]:
+    """Diurnal spot pool over ``spot_nodes`` (ids from
+    ``Cluster.add_spot_nodes``): each period every spot node arrives
+    around the off-peak start and is revoked (with ``warning_s`` of
+    notice) around the window end, with per-node jitter.  With
+    probability ``surprise_p`` per window the revoke instead lands
+    mid-window with NO warning (capacity reclaimed early)."""
+    rng = np.random.default_rng(seed)
+    events: list[CapacityEvent] = []
+    n_periods = int(math.ceil(horizon_s / period_s))
+    for nid in spot_nodes:
+        for k in range(n_periods):
+            start = k * period_s + abs(float(rng.normal(0.0, jitter_s)))
+            end = start + window_frac * period_s \
+                - abs(float(rng.normal(0.0, jitter_s)))
+            surprise = rng.random() < surprise_p
+            if surprise:
+                end = start + float(rng.uniform(0.15, 0.7)) \
+                    * window_frac * period_s
+            if start >= horizon_s or end <= start:
+                continue
+            events.append(CapacityEvent(start, nid, down=False,
+                                        kind="spot-arrive"))
+            if end < horizon_s:
+                events.append(CapacityEvent(
+                    end, nid, down=True,
+                    warning_s=0.0 if surprise else warning_s,
+                    kind="spot-revoke"))
+    events.sort(key=lambda e: (e.time, e.node, not e.down))
+    return events
 
 
 def _feasible_plans(profile, gpus: int, env: Env, allow_tp_pp: bool,

@@ -7,6 +7,15 @@ that saved (elastic scaling).  Params/opt-state are saved as plain named
 arrays; on restore each leaf is re-placed under the new shardings.
 
 Layout:  <dir>/step_<n>/{arrays.npz, meta.json}   (atomic via tmp+rename)
+
+``meta.json`` is the latest-checkpoint pointer (``list_steps`` keys on
+its existence), so its write path is crash-safe: contents land in a tmp
+file that is fsynced, atomically renamed into place, and the directory
+rename that publishes the whole step is fsynced through the parent — a
+crash mid-save can never leave a torn pointer, only the previous intact
+checkpoint.  ``restore_cost_estimate`` prices a restart from real pytree
+sizes with the same bandwidth model the simulator charges for simulated
+failures (``memory.restore_seconds``).
 """
 
 from __future__ import annotations
@@ -83,10 +92,25 @@ class CheckpointManager:
         def _write():
             tmp = Path(tempfile.mkdtemp(dir=self.dir, prefix=".tmp_"))
             np.savez(tmp / "arrays.npz", **arrays)
-            (tmp / "meta.json").write_text(json.dumps(meta))
+            # meta.json is the latest-checkpoint pointer: write-to-temp +
+            # fsync + atomic rename so a crash mid-write can never leave
+            # a torn (half-written) manifest that list_steps would trust
+            mtmp = tmp / ".meta.json.tmp"
+            with open(mtmp, "w") as f:
+                f.write(json.dumps(meta))
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(mtmp, tmp / "meta.json")
             if target.exists():
                 shutil.rmtree(target)
             os.replace(tmp, target)
+            # publish durably: the directory rename itself must survive a
+            # power loss, or the pointer points at nothing after reboot
+            fd = os.open(self.dir, os.O_RDONLY)
+            try:
+                os.fsync(fd)
+            finally:
+                os.close(fd)
             self._gc()
 
         if self.async_save and not block:
@@ -100,6 +124,24 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+
+    @staticmethod
+    def restore_cost_estimate(params: Any,
+                              opt_state: Any | None = None) -> float:
+        """Seconds a restart from this state would cost: total checkpoint
+        bytes (every param/opt leaf) through the shared restore-bandwidth
+        model — the same formula the simulator charges simulated failures
+        via ``memory.ckpt_state_bytes`` (there, sized analytically from
+        the model profile instead of live arrays)."""
+        from repro.core.memory import restore_seconds
+        nbytes = 0
+        leaves = jax.tree.leaves({"params": params,
+                                  **({"opt": opt_state}
+                                     if opt_state is not None else {})})
+        for leaf in leaves:
+            nbytes += int(np.prod(np.shape(leaf))) \
+                * np.dtype(getattr(leaf, "dtype", np.float32)).itemsize
+        return restore_seconds(float(nbytes))
 
     def _gc(self) -> None:
         steps = self.list_steps()

@@ -1,0 +1,304 @@
+"""Failure & elasticity engine (ISSUE 8 tentpole).
+
+Directed mechanics: a node failure evicts residents through the
+scheduler's recovery policy (shrink onto the surviving placement, or
+kill-and-requeue under ``cfg.recovery="kill"`` / when nothing feasible
+survives), hard failures roll progress back to the last checkpoint
+while revoke-with-warning drains cleanly, spot nodes start down and
+arrive/revoke through the same machinery.
+
+Properties: the incremental pass engine stays BIT-EXACT with the full
+rebuild under random failure-storm + spot-churn traces (including
+failures mid-pause and mid-reconfiguration), and the event engine
+tracks the discrete reference loop's JCTs under capacity churn.
+"""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import baselines, paper_models, trace
+from repro.core.cluster import Cluster, Job, JobState, hetero_cluster
+from repro.core.simulator import Simulator
+from repro.core.trace import CapacityEvent
+from repro.parallel.plan import ExecutionPlan
+
+FIT_CACHE: dict = {}
+HET_SPEC = [("a800", 3), ("h800", 1), ("a100-40g", 2), ("v100", 2)]
+
+
+def _job(name, profile, req_gpus, submit=0.0, guaranteed=True, tenant="A",
+         iters=1e6):
+    return Job(name=name, profile=profile, submit=submit,
+               target_iters=iters, req_gpus=req_gpus,
+               req_cpus=12 * req_gpus, orig_plan=ExecutionPlan(dp=1),
+               guaranteed=guaranteed, tenant=tenant)
+
+
+def _sim(sched_name, cluster, jobs, capacity=None, quotas=None,
+         engine="full", mode="event", recovery="shrink",
+         max_time=7 * 86400.0):
+    sched = baselines.ALL[sched_name](quotas=quotas, pass_engine=engine)
+    sched.cfg.recovery = recovery
+    return Simulator(cluster, sched, fit_cache=FIT_CACHE, mode=mode,
+                     capacity=capacity).run(jobs, max_time=max_time)
+
+
+def _assert_exact(full, inc):
+    assert full.jcts == inc.jcts
+    assert full.makespan == inc.makespan
+    assert full.n_reconfig == inc.n_reconfig
+    assert full.n_events == inc.n_events
+    assert full.guarantee_violations == inc.guarantee_violations
+    assert (full.n_cap_events, full.n_shrink_recover, full.n_kill_requeue) \
+        == (inc.n_cap_events, inc.n_shrink_recover, inc.n_kill_requeue)
+
+
+def _spanning_job(cluster, sched, name="a"):
+    """One running job placed across BOTH nodes of a 2-node cluster."""
+    sim = Simulator(cluster, sched, fit_cache=FIT_CACHE)
+    job = _job(name, paper_models.profile("llama-30b"), 16)
+    js = JobState(job=job, fitted=sim._fitted(job))
+    sched.schedule([js], cluster, 0.0)
+    assert js.status == "running"
+    assert len(js.placement) == 2, "scenario needs a spanning placement"
+    return sim, js
+
+
+# --- directed: recovery-policy mechanics -------------------------------------
+
+def test_node_failure_shrinks_onto_survivors():
+    cluster = Cluster(n_nodes=2)
+    sched = baselines.make_rubick()
+    sim, js = _spanning_job(cluster, sched)
+    js.progress, js.ckpt_progress = 500.0, 100.0
+    down, up, affected = sim._apply_capacity(
+        [CapacityEvent(1000.0, 1, down=True)], [js], 1000.0)
+    assert down == [1] and up == []
+    assert [(a[0], a[2]) for a in affected] == [(js, "shrunk")]
+    assert affected[0][1].keys() == {0, 1}        # pre-loss placement
+    assert js.status == "running"
+    assert set(js.placement) == {0}
+    assert js.total_gpus == 8
+    assert js.pause_until > 1000.0                # checkpoint-restore pause
+    assert not js.needs_restore
+    # hard failure: rolled back to the last periodic checkpoint
+    assert 100.0 <= js.progress < 500.0
+    assert js.ckpt_progress == js.progress
+    assert not cluster.nodes[1].up
+    assert cluster.live_gpus == 8 and cluster.total_gpus == 16
+
+
+def test_kill_mode_always_requeues():
+    cluster = Cluster(n_nodes=2)
+    sched = baselines.make_rubick()
+    sched.cfg.recovery = "kill"
+    sim, js = _spanning_job(cluster, sched)
+    down, _, affected = sim._apply_capacity(
+        [CapacityEvent(1000.0, 1, down=True)], [js], 1000.0)
+    assert affected[0][2] == "killed"
+    assert js.status == "queued" and js.placement == {}
+    assert js.plan is None and js.alloc is None
+    assert js.needs_restore                       # restore paid on restart
+    assert js.pause_until == 0.0
+
+
+def test_graceful_revoke_loses_no_work():
+    cluster = Cluster(n_nodes=2)
+    sched = baselines.make_rubick()
+    sim, js = _spanning_job(cluster, sched)
+    js.progress, js.ckpt_progress = 500.0, 100.0
+    _, _, affected = sim._apply_capacity(
+        [CapacityEvent(1000.0, 1, down=True, warning_s=120.0,
+                       kind="spot-revoke")], [js], 1000.0)
+    assert affected[0][2] == "shrunk"
+    assert js.progress == 500.0                   # drained during warning
+    assert js.ckpt_progress == 500.0
+
+
+def test_failure_of_sole_node_kills_even_in_shrink_mode():
+    cluster = Cluster(n_nodes=1)
+    sched = baselines.make_rubick()
+    sim = Simulator(cluster, sched, fit_cache=FIT_CACHE)
+    job = _job("solo", paper_models.profile("roberta-355m"), 8)
+    js = JobState(job=job, fitted=sim._fitted(job))
+    sched.schedule([js], cluster, 0.0)
+    assert js.status == "running"
+    _, _, affected = sim._apply_capacity(
+        [CapacityEvent(500.0, 0, down=True)], [js], 500.0)
+    assert affected[0][2] == "killed"             # nothing survives
+    assert js.status == "queued" and js.needs_restore
+
+
+def test_node_recover_restores_capacity():
+    cluster = Cluster(n_nodes=2)
+    cluster.nodes[1].up = False
+    sim = Simulator(cluster, baselines.make_rubick(), fit_cache=FIT_CACHE)
+    down, up, affected = sim._apply_capacity(
+        [CapacityEvent(2000.0, 1, down=False, kind="recover")], [], 2000.0)
+    assert (down, up, affected) == ([], [1], [])
+    assert cluster.nodes[1].up and cluster.live_gpus == 16
+    # idempotent: re-applying the same recover is a no-op
+    down, up, _ = sim._apply_capacity(
+        [CapacityEvent(2001.0, 1, down=False)], [], 2001.0)
+    assert (down, up) == ([], [])
+
+
+# --- directed: spot capacity + trace generators ------------------------------
+
+def test_spot_nodes_start_down():
+    cluster = Cluster(n_nodes=1)
+    ids = cluster.add_spot_nodes(2)
+    assert ids == [1, 2]
+    assert cluster.total_gpus == 24 and cluster.live_gpus == 8
+    assert all(cluster.nodes[i].spot and not cluster.nodes[i].up
+               for i in ids)
+    assert cluster.nodes[1].free({}) == (0, 0, 0.0)
+
+
+def test_capacity_trace_generators_deterministic():
+    storm = trace.failure_storm(6, 86400.0, seed=3, mtbf_s=8 * 3600.0,
+                                mttr_s=1800.0, storm=(0.0, 4 * 3600.0, 10.0))
+    assert storm == trace.failure_storm(6, 86400.0, seed=3,
+                                        mtbf_s=8 * 3600.0, mttr_s=1800.0,
+                                        storm=(0.0, 4 * 3600.0, 10.0))
+    assert storm, "storm window at 10x should produce failures"
+    assert all(e1.time <= e2.time for e1, e2 in zip(storm, storm[1:]))
+    assert all(e.time < 86400.0 for e in storm if e.down)
+    churn = trace.spot_churn([4, 5], 2 * 86400.0, seed=1)
+    assert churn == trace.spot_churn([4, 5], 2 * 86400.0, seed=1)
+    assert {e.node for e in churn} <= {4, 5}
+    assert {e.kind for e in churn} <= {"spot-arrive", "spot-revoke"}
+    # every revoke follows an arrive for its node
+    state = {}
+    for e in sorted(churn, key=lambda e: (e.time, e.node, not e.down)):
+        if e.down:
+            assert state.get(e.node), f"revoke before arrive on {e.node}"
+            state[e.node] = False
+        else:
+            state[e.node] = True
+
+
+def test_spot_arrival_and_revoke_end_to_end():
+    """Two fixed-allocation full-node jobs vs one regular node — the
+    second can only run on the spot node: its arrival starts the queued
+    job, the graceful revoke kills-and-requeues it with no lost work —
+    sanitized end to end (no placement on a down node, usage maps
+    folded)."""
+    from repro.analysis.sanitizer import SchedSanitizer
+    prof = paper_models.profile("roberta-355m")
+    cluster = Cluster(n_nodes=1)
+    spot = cluster.add_spot_nodes(1)
+    cap = [CapacityEvent(600.0, spot[0], down=False, kind="spot-arrive"),
+           CapacityEvent(5000.0, spot[0], down=True, warning_s=120.0,
+                         kind="spot-revoke")]
+    jobs = [_job("a", prof, 8), _job("b", prof, 8)]
+    sched = baselines.ALL["rubick-e"](pass_engine="incremental")
+    sched.cfg.sanitize = True
+    sched._san = SchedSanitizer()
+    sim = Simulator(cluster, sched, fit_cache=FIT_CACHE, capacity=cap)
+    res = sim.run(jobs, max_time=20000.0)
+    by = {s.job.name: s for s in sim.last_states}
+    assert res.n_cap_events == 2
+    assert res.n_kill_requeue == 1          # spot-only resident: killed
+    assert by["b"].status == "queued" and by["b"].needs_restore
+    assert not cluster.nodes[spot[0]].up
+    assert all(spot[0] not in s.placement for s in sim.last_states)
+
+
+def test_killed_job_restart_pays_restore_pause():
+    """Fail-and-recover the only node: the job restarts with a restore
+    pause, so its JCT exceeds the failure-free run by at least the
+    outage plus the checkpoint-restore cost."""
+    cluster0, cluster1 = Cluster(n_nodes=1), Cluster(n_nodes=1)
+    jobs = [_job("solo", paper_models.profile("roberta-355m"), 8,
+                 iters=30000.0)]
+    base = _sim("rubick", cluster0, jobs)
+    cap = [CapacityEvent(1000.0, 0, down=True),
+           CapacityEvent(2000.0, 0, down=False, kind="recover")]
+    failed = _sim("rubick", cluster1, jobs, capacity=cap)
+    assert failed.n_cap_events == 2 and failed.n_kill_requeue == 1
+    assert failed.jcts["solo"] >= base.jcts["solo"] + 1000.0
+
+
+# --- parity: incremental ≡ full and event ≈ discrete under churn -------------
+
+@pytest.mark.parametrize("mode", ["event", "discrete"])
+def test_failure_mid_reconfig_pause_parity(mode):
+    """An arrival at t=600 forces the spanning resident to shrink (a
+    reconfig pause), then node 1 dies at t=640 — INSIDE the pause — and
+    recovers later.  Both pass engines must agree exactly."""
+    jobs = [_job("big", paper_models.profile("llama-30b"), 16,
+                 iters=4000.0),
+            _job("late", paper_models.profile("roberta-355m"), 8,
+                 submit=600.0, iters=4000.0)]
+    cap = [CapacityEvent(640.0, 1, down=True),
+           CapacityEvent(4000.0, 1, down=False, kind="recover")]
+    full = _sim("rubick", Cluster(n_nodes=2), jobs, cap, engine="full",
+                mode=mode, max_time=86400.0)
+    inc = _sim("rubick", Cluster(n_nodes=2), jobs, cap,
+               engine="incremental", mode=mode, max_time=86400.0)
+    _assert_exact(full, inc)
+    assert full.n_cap_events == 2
+
+
+def _churn_world(variant):
+    if variant == "hetero":
+        cluster = hetero_cluster(HET_SPEC)
+        spot = cluster.add_spot_nodes(1, gpu_model="v100")
+    else:
+        cluster = Cluster(n_nodes=5)
+        spot = cluster.add_spot_nodes(1)
+    return cluster, spot
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 200),
+       recovery=st.sampled_from(["shrink", "kill"]),
+       sched_name=st.sampled_from(["rubick", "sia", "synergy"]),
+       variant=st.sampled_from(["base", "mt", "hetero"]))
+def test_parity_property_under_capacity_churn(seed, recovery, sched_name,
+                                              variant):
+    """Property: on any random trace with a failure storm + spot churn
+    layered on top (failures land mid-pause, mid-reconfig, on queued and
+    running jobs alike), both pass engines make identical decisions."""
+    quotas = {"A": 24} if variant == "mt" else None
+    gpu_types = [t for t, _ in HET_SPEC] if variant == "hetero" else None
+    jobs = trace.philly(n_jobs=20, hours=4, seed=seed, load_scale=3.0,
+                        variant=variant, gpu_types=gpu_types)
+    horizon = 86400.0
+    cl_f, spot_f = _churn_world(variant)
+    cl_i, _ = _churn_world(variant)
+    n_regular = len(cl_f.nodes) - len(spot_f)
+    cap = (trace.failure_storm(n_regular, horizon, seed=seed + 1,
+                               mtbf_s=6 * 3600.0, mttr_s=1800.0,
+                               storm=(3600.0, 5 * 3600.0, 8.0))
+           + trace.spot_churn(spot_f, horizon, seed=seed + 2,
+                              period_s=6 * 3600.0, window_frac=0.5,
+                              jitter_s=600.0))
+    full = _sim(sched_name, cl_f, jobs, cap, quotas, "full",
+                recovery=recovery)
+    inc = _sim(sched_name, cl_i, jobs, cap, quotas, "incremental",
+               recovery=recovery)
+    _assert_exact(full, inc)
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 100),
+       recovery=st.sampled_from(["shrink", "kill"]))
+def test_event_tracks_discrete_under_failures(seed, recovery):
+    """Property: under a failure storm, the event engine reproduces the
+    discrete reference loop's average JCT within tolerance (the engines
+    sample guarantees at different cadences, so only JCT/makespan pin)."""
+    jobs = trace.generate(n_jobs=12, hours=3, seed=seed, load_scale=2.0)
+    cap = trace.failure_storm(4, 2 * 86400.0, seed=seed + 9,
+                              mtbf_s=8 * 3600.0, mttr_s=1800.0,
+                              storm=(0.0, 4 * 3600.0, 6.0))
+    ev = _sim("rubick", Cluster(n_nodes=4), jobs, cap, mode="event",
+              recovery=recovery)
+    di = _sim("rubick", Cluster(n_nodes=4), jobs, cap, mode="discrete",
+              recovery=recovery)
+    assert ev.avg_jct == pytest.approx(di.avg_jct, rel=0.02)
+    assert ev.makespan == pytest.approx(di.makespan, rel=0.02)
+    assert (ev.n_cap_events, ev.n_shrink_recover, ev.n_kill_requeue) \
+        == (di.n_cap_events, di.n_shrink_recover, di.n_kill_requeue)

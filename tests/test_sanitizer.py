@@ -315,6 +315,84 @@ def test_sanitizer_catches_pause_crediting():
     san.check_window(s, old, t, to, pu, th)
 
 
+# --- bugs 7 + 8: failure-path eviction reverted (ISSUE 8) --------------------
+
+from repro.core.simulator import Simulator
+from repro.core.trace import CapacityEvent
+
+
+class _ForgetEvictionSim(Simulator):
+    """Failure path that flips the node down but forgets to evict the
+    resident: its placement keeps pointing at the dead node."""
+
+    def _evict_resident(self, s, active, down_set, graceful, now):
+        return s, dict(s.placement), "skipped"
+
+
+class _LeakUsageSim(Simulator):
+    """Spot-revoke that evicts correctly but reports an EMPTY pre-loss
+    placement, so the incremental pass engine folds nothing out of its
+    usage map — the dead node's entry leaks and re-blocks it forever."""
+
+    def _evict_resident(self, s, active, down_set, graceful, now):
+        s, _before, outcome = super()._evict_resident(
+            s, active, down_set, graceful, now)
+        return s, {}, outcome
+
+
+def _node_failure_scenario(sim_cls):
+    """One 16-GPU job spanning both nodes, node 1 dies at t=1000: the
+    recovery policy must shrink it onto node 0 (or kill it) — never
+    leave state referencing the dead node."""
+    cluster = Cluster(n_nodes=2)
+    sched = baselines.ALL["rubick-e"](pass_engine="incremental")
+    sched.cfg.sanitize = True
+    sched._san = SchedSanitizer()
+    jobs = [_job("span", paper_models.profile("llama-30b"), 16)]
+    cap = [CapacityEvent(1000.0, 1, down=True)]
+    return sim_cls(cluster, sched, fit_cache=FIT_CACHE,
+                   capacity=cap).run(jobs, max_time=5000.0)
+
+
+def _spot_revoke_scenario(sim_cls):
+    """Fixed-allocation full-node jobs: the second runs on the spot node
+    once it arrives, and the revoke at t=5000 must fold its capacity
+    out of every pass index."""
+    prof = paper_models.profile("roberta-355m")
+    cluster = Cluster(n_nodes=1)
+    spot = cluster.add_spot_nodes(1)
+    sched = baselines.ALL["rubick-e"](pass_engine="incremental")
+    sched.cfg.sanitize = True
+    sched._san = SchedSanitizer()
+    cap = [CapacityEvent(600.0, spot[0], down=False, kind="spot-arrive"),
+           CapacityEvent(5000.0, spot[0], down=True, warning_s=120.0,
+                         kind="spot-revoke")]
+    jobs = [_job("a", prof, 8), _job("b", prof, 8)]
+    return sim_cls(cluster, sched, fit_cache=FIT_CACHE,
+                   capacity=cap).run(jobs, max_time=20000.0)
+
+
+def test_sanitizer_catches_forgotten_eviction():
+    with pytest.raises(SanitizerViolation) as exc:
+        _node_failure_scenario(_ForgetEvictionSim)
+    assert exc.value.rule == "dead-node-placement"
+    assert exc.value.sites
+
+
+def test_sanitizer_catches_leaked_spot_usage():
+    with pytest.raises(SanitizerViolation) as exc:
+        _spot_revoke_scenario(_LeakUsageSim)
+    assert exc.value.rule == "dead-node-usage"
+    assert exc.value.sites
+
+
+def test_clean_failure_scenarios_pass():
+    res = _node_failure_scenario(Simulator)
+    assert res.n_shrink_recover + res.n_kill_requeue == 1
+    res = _spot_revoke_scenario(Simulator)
+    assert res.n_kill_requeue == 1
+
+
 # --- clean end-to-end runs under both simulator engines ----------------------
 
 @pytest.mark.parametrize("mode", ["event", "discrete"])
