@@ -18,8 +18,10 @@ Two things every benchmark needs and none should reimplement:
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import subprocess
 import time
 from pathlib import Path
 
@@ -32,11 +34,56 @@ def out_dir() -> Path:
     return d
 
 
+_GIT: dict | None = None
+
+
+def git_info() -> dict:
+    """``{"sha": ..., "dirty": ...}`` of the repo the benchmark ran from
+    (cached per process; ``sha="unknown"`` outside a git checkout)."""
+    global _GIT
+    if _GIT is None:
+        root = Path(__file__).parent
+        try:
+            sha = subprocess.run(
+                ["git", "rev-parse", "HEAD"], cwd=root,
+                capture_output=True, text=True, timeout=10,
+                check=True).stdout.strip()
+            dirty = bool(subprocess.run(
+                ["git", "status", "--porcelain"], cwd=root,
+                capture_output=True, text=True, timeout=10,
+                check=True).stdout.strip())
+        except (OSError, subprocess.SubprocessError):
+            sha, dirty = "unknown", False
+        _GIT = {"sha": sha, "dirty": dirty}
+    return dict(_GIT)
+
+
+def config_hash(payload: dict) -> str:
+    """Short content hash of a benchmark's configuration, so two
+    artifacts are comparable iff their hashes match."""
+    blob = json.dumps(payload, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+
+def provenance(config: dict | None = None) -> dict:
+    """The stamp every ``BENCH_*.json`` carries: where the numbers came
+    from (git SHA + dirty flag), what produced them (config hash), and
+    which instrumentation modes were live (sanitizer / flight-recorder
+    tracing change the measured hot path)."""
+    from repro.analysis import sanitize_enabled
+    from repro.obs import trace_enabled
+    return {**git_info(),
+            "config_hash": config_hash(config or {}),
+            "sanitize": sanitize_enabled(),
+            "trace": trace_enabled()}
+
+
 def write_bench_json(name: str, rows: list[dict],
                      extra: dict | None = None) -> Path:
     payload = {"bench": name, "unix_time": time.time(), "rows": rows}
     if extra:
         payload.update(extra)
+    payload["provenance"] = provenance(extra)
     path = out_dir() / f"BENCH_{name}.json"
     path.write_text(json.dumps(payload, indent=2, default=str) + "\n")
     return path

@@ -76,11 +76,11 @@ def storm_fleet(n_big: int, n_small: int, big_s: float, small_s: float,
 
 
 def _run(cluster: Cluster, jobs, cache, *, engine="incremental",
-         recovery="shrink", capacity=None):
+         recovery="shrink", capacity=None, recorder=None):
     sched = baselines.make_rubick(pass_engine=engine)
     sched.cfg.recovery = recovery
     sim = Simulator(cluster, sched, fit_cache=dict(cache),
-                    capacity=capacity)
+                    capacity=capacity, recorder=recorder)
     res = sim.run(jobs, max_time=7 * HORIZON_S)
     return res, sim
 
@@ -105,7 +105,21 @@ def _metrics(res, sim) -> dict:
             "n_reconfig": res.n_reconfig}
 
 
-def storm_rows(cache, smoke: bool) -> list[dict]:
+def _traced_export(rec, mode: str) -> dict:
+    """Write the flight-recorder artifacts for one storm run and return
+    the pointer block stored in the bench row."""
+    from repro.obs import write_jsonl, write_perfetto
+    base = _artifacts.out_dir() / f"TRACE_failures_storm_{mode}"
+    jsonl = base.with_suffix(".jsonl")
+    perfetto = base.with_suffix(".perfetto.json")
+    write_jsonl(rec, jsonl)
+    write_perfetto(rec, perfetto)
+    return {"trace_jsonl": str(jsonl), "trace_perfetto": str(perfetto),
+            "n_trace_events": rec.events.n_total,
+            "n_trace_dropped": rec.events.n_dropped}
+
+
+def storm_rows(cache, smoke: bool, traced: bool = False) -> list[dict]:
     if smoke:
         n_nodes, jobs = 4, storm_fleet(2, 2, 3 * 3600.0, 4 * 3600.0)
         cap = trace.failure_storm(n_nodes, HORIZON_S, seed=11,
@@ -118,17 +132,24 @@ def storm_rows(cache, smoke: bool) -> list[dict]:
                                   storm=(5400.0, 6 * 3600.0, 25.0))
     rows, by_mode = [], {}
     for mode in ("shrink", "kill"):
+        rec = None
+        if traced:
+            from repro.obs import FlightRecorder
+            rec = FlightRecorder(meta={"bench": "failures",
+                                       "recovery": mode})
         t0 = time.perf_counter()
         res, sim = _run(Cluster(n_nodes=n_nodes), jobs, cache,
-                        recovery=mode, capacity=cap)
+                        recovery=mode, capacity=cap, recorder=rec)
         secs = time.perf_counter() - t0
         by_mode[mode] = res
+        derived = {**_metrics(res, sim), "wall_s": round(secs, 2),
+                   "n_jobs": len(jobs), "gpus": n_nodes * 8}
+        if rec is not None:
+            derived.update(_traced_export(rec, mode))
+            derived["total_paused_h"] = round(res.total_paused_s / 3600, 4)
         rows.append({"name": f"failures/storm_{mode}",
                      "us_per_call": secs / max(res.n_sched_calls, 1) * 1e6,
-                     "derived": {**_metrics(res, sim),
-                                 "wall_s": round(secs, 2),
-                                 "n_jobs": len(jobs),
-                                 "gpus": n_nodes * 8}})
+                     "derived": derived})
     s, k = by_mode["shrink"], by_mode["kill"]
     rows.append({"name": "failures/shrink_vs_kill", "derived": {
         "jct_shrink_h": round(s.avg_jct / 3600, 4),
@@ -198,9 +219,12 @@ def parity_row(cache, smoke: bool) -> dict:
         "decision_parity": bool(fp == fq)}}
 
 
-def run(smoke: bool = False) -> list[dict]:
+def run(smoke: bool = False, traced: bool | None = None) -> list[dict]:
+    if traced is None:
+        from repro.obs import trace_enabled
+        traced = trace_enabled()
     cache = _artifacts.prewarmed_fit_cache()
-    rows = storm_rows(cache, smoke)
+    rows = storm_rows(cache, smoke, traced=traced)
     rows.append(spot_row(cache, smoke))
     rows.append(parity_row(cache, smoke))
     _artifacts.write_bench_json("failures", rows, extra={
@@ -210,7 +234,8 @@ def run(smoke: bool = False) -> list[dict]:
 
 def main(argv: list[str]) -> int:
     smoke = "--smoke" in argv
-    rows = run(smoke=smoke)
+    traced = True if "--trace" in argv else None
+    rows = run(smoke=smoke, traced=traced)
     by_name = {}
     for row in rows:
         print(row["name"], row["derived"])

@@ -14,7 +14,18 @@ this rule flags:
 * dict-order-dependent iteration over ``id()``-keyed containers:
   ``id()`` values vary run to run, so bare iteration over such a dict /
   set feeds allocator addresses into decision order unless the loop is
-  order-insensitive (waive with the reason) or wrapped in ``sorted()``.
+  order-insensitive (waive with the reason) or wrapped in ``sorted()``;
+* observability leaks (flight-recorder discipline, ``repro.obs``):
+  - ``print(...)`` / ``logging`` on decision paths — structured events
+    go through the recorder, not stdout;
+  - wall-clock expressions fed into recorder DECISION channels
+    (``.decision()`` / ``.sample()`` / ``.pause()`` arguments must be
+    sim time — a ``perf_counter``/``time.time`` argument would make the
+    JSONL decision log differ run to run);
+  - profiler span emits (``.span()`` / ``.span_since()``) — the one
+    sanctioned wall-clock channel, quarantined to the Perfetto export.
+    Every span emit site must carry an explicit waiver acknowledging
+    the wall-clock read.
 """
 
 from __future__ import annotations
@@ -29,6 +40,13 @@ _WALLCLOCK = {("time", "time"), ("time", "monotonic"),
               ("time", "monotonic_ns"), ("time", "time_ns")}
 _DATETIME_ATTRS = {"now", "utcnow", "today"}
 _RANDOM_MODULES = {"random"}
+# recorder channels whose arguments MUST be sim time (never wall-clock)
+_SIM_TIME_EMITS = {"decision", "sample", "pause"}
+# profiler span channel: wall-clock by design, waiver required per site
+_SPAN_EMITS = {"span", "span_since"}
+# wall-clock producers that must not leak into a decision emit's args
+_WALLCLOCK_FEEDS = _WALLCLOCK | {("time", "perf_counter"),
+                                 ("time", "perf_counter_ns")}
 
 
 def _dotted(expr: ast.AST) -> list[str]:
@@ -79,6 +97,23 @@ class DeterminismRule(Rule):
             return None
         dotted = ".".join(path)
         line = node.lineno
+        if path == ["print"]:
+            return Violation(module.relpath, line, self.rule_id,
+                             "print() on a decision path; emit a "
+                             "structured recorder event instead")
+        if path[0] == "logging" or path[-1] == "getLogger":
+            return Violation(module.relpath, line, self.rule_id,
+                             f"{dotted}() on a decision path; emit a "
+                             f"structured recorder event instead")
+        if len(path) >= 2 and path[-1] in _SPAN_EMITS:
+            return Violation(module.relpath, line, self.rule_id,
+                             f"profiler span emit {dotted}() reads wall-"
+                             f"clock; waive to acknowledge (spans export "
+                             f"to Perfetto only, never the JSONL log)")
+        if len(path) >= 2 and path[-1] in _SIM_TIME_EMITS:
+            v = self._check_emit_args(module, node, dotted)
+            if v:
+                return v
         if tuple(path[-2:]) in _WALLCLOCK and path[0] != "self":
             return Violation(module.relpath, line, self.rule_id,
                              f"wall-clock read {dotted}() on a decision "
@@ -104,6 +139,27 @@ class DeterminismRule(Rule):
         if dotted in ("os.urandom", "uuid.uuid4", "uuid.uuid1"):
             return Violation(module.relpath, line, self.rule_id,
                              f"entropy source {dotted}()")
+        return None
+
+    def _check_emit_args(self, module: LintModule, node: ast.Call,
+                         dotted: str) -> Violation | None:
+        """Recorder decision channels must be fed sim time: any wall-
+        clock read inside the argument list would leak run-to-run jitter
+        into the (byte-deterministic) JSONL decision log."""
+        args: list[ast.AST] = list(node.args)
+        args += [kw.value for kw in node.keywords]
+        for arg in args:
+            for sub in ast.walk(arg):
+                if not isinstance(sub, ast.Call):
+                    continue
+                p = _dotted(sub.func)
+                if tuple(p[-2:]) in _WALLCLOCK_FEEDS \
+                        or p in (["perf_counter"], ["perf_counter_ns"]):
+                    return Violation(
+                        module.relpath, node.lineno, self.rule_id,
+                        f"wall-clock read {'.'.join(p)}() fed into "
+                        f"{dotted}(); decision events are stamped with "
+                        f"sim time only")
         return None
 
     def _check_iter(self, module: LintModule, it: ast.AST,

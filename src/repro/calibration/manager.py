@@ -80,6 +80,7 @@ class CalibrationManager:
         # cold fit (fit_batch's default 3) are needed — keep ≥2 so one
         # noisy restart can still escape a bad incumbent basin
         self.refit_restarts = refit_restarts
+        self.recorder = None           # flight recorder (repro.obs), opt-in
         self._current: dict[tuple, FitParams] = {}
         self._profiles: dict[tuple, ModelProfile] = {}
         self._versions: dict[tuple, int] = {}
@@ -213,6 +214,11 @@ class CalibrationManager:
         refit = Refit(profile=profile, old=cur, new=new, version=version,
                       t=now, rmsle_before=before, rmsle_after=after)
         self.history.append(refit)
+        if self.recorder is not None:
+            self.recorder.decision(
+                "refit", now,
+                data={"model": profile.name, "version": version,
+                      "rmsle_before": before, "rmsle_after": after})
         return refit
 
     @staticmethod

@@ -27,6 +27,7 @@ state changes (a placement, an eviction, or a completion event).
 from __future__ import annotations
 
 import weakref
+from time import perf_counter
 
 from repro.core import memory
 from repro.core.cluster import (Cluster, JobState, SchedEvents,
@@ -143,6 +144,8 @@ class _FixedPlanScheduler(RubickScheduler):
     # ------------------------------------------------------------------
     def schedule(self, jobs, cluster, now=0.0, events=None):
         self._scope_memos(cluster)
+        rec = self.recorder
+        t_pass = perf_counter() if rec is not None else 0.0
         if events is not None and events.refit:
             self._purge_refit_memos(events.refit)
         active = [j for j in jobs if j.status != "done"]
@@ -163,10 +166,17 @@ class _FixedPlanScheduler(RubickScheduler):
             if self._gang_place(js, active, cluster, now, used):
                 self._fold(js.placement, used)
                 self._gang_wake(failed)
+                if rec is not None:
+                    rec.decision("admit", now, job=js.job.name,
+                                 data={"gpus": js.total_gpus,
+                                       "queued_s": now - js.job.submit})
             else:
                 self._gang_fail(failed, sig, js)
         if self._san is not None:
             self._san.end_pass(active, cluster, None, self)
+        if rec is not None:
+            # lint: nondeterminism — profiler span, wall clock by design
+            rec.span_since("pass", t_pass, now, engine="gang")
 
     def _gang_place(self, js: JobState, active, cluster, now,
                     used=None) -> bool:
@@ -266,6 +276,8 @@ class AntManLike(_FixedPlanScheduler):
 
     def schedule(self, jobs, cluster, now=0.0, events=None):
         self._scope_memos(cluster)
+        rec = self.recorder
+        t_pass = perf_counter() if rec is not None else 0.0
         if events is not None and events.refit:
             self._purge_refit_memos(events.refit)
         active = [j for j in jobs if j.status != "done"]
@@ -286,10 +298,18 @@ class AntManLike(_FixedPlanScheduler):
             if self._gang_place(js, active, cluster, now, used):
                 self._fold(js.placement, used)
                 self._gang_wake(failed)
+                if rec is not None:
+                    rec.decision("admit", now, job=js.job.name,
+                                 data={"gpus": js.total_gpus,
+                                       "queued_s": now - js.job.submit})
                 continue
             if self._try_preempt(js, active, cluster, now, used):
                 self._fold(js.placement, used)
                 self._gang_wake(failed)
+                if rec is not None:
+                    rec.decision("admit", now, job=js.job.name,
+                                 data={"gpus": js.total_gpus,
+                                       "queued_s": now - js.job.submit})
             else:
                 self._gang_fail(failed, sig, js)
         queued_be = sorted([j for j in active if j.status == "queued"
@@ -302,10 +322,17 @@ class AntManLike(_FixedPlanScheduler):
             if self._gang_place(js, active, cluster, now, used):
                 self._fold(js.placement, used)
                 self._gang_wake(failed)
+                if rec is not None:
+                    rec.decision("admit", now, job=js.job.name,
+                                 data={"gpus": js.total_gpus,
+                                       "queued_s": now - js.job.submit})
             else:
                 self._gang_fail(failed, sig, js)
         if self._san is not None:
             self._san.end_pass(active, cluster, None, self)
+        if rec is not None:
+            # lint: nondeterminism — profiler span, wall clock by design
+            rec.span_since("pass", t_pass, now, engine="gang")
 
     def _try_preempt(self, js, active, cluster, now, used) -> bool:
         """Preempt best-effort jobs one at a time until the guaranteed
@@ -316,6 +343,7 @@ class AntManLike(_FixedPlanScheduler):
         be = [j for j in active if j.status == "running"
               and not j.job.guaranteed]
         preempted: list[tuple] = []
+        rec = self.recorder
         for victim in be:
             preempted.append((victim, dict(victim.placement),
                               victim.plan, victim.alloc,
@@ -327,6 +355,14 @@ class AntManLike(_FixedPlanScheduler):
             victim.alloc = None
             victim.n_reconfig += 1
             if self._gang_place(js, active, cluster, now, used):
+                if rec is not None:
+                    # emit only on success: failed walks roll back below
+                    for v, placement, _p, _a, _n in preempted:
+                        rec.decision(
+                            "preempt", now, job=v.job.name,
+                            cause=js.job.name,
+                            data={"from_gpus": sum(
+                                g for g, _, _ in placement.values())})
                 return True
         for victim, placement, plan, alloc, n_rcfg in preempted:
             victim.status = "running"

@@ -231,6 +231,22 @@ def used_per_node(jobs: list[JobState]) -> dict[int, tuple[int, int, float]]:
     return {k: (int(v[0]), int(v[1]), v[2]) for k, v in used.items()}
 
 
+def state_digest(cluster: Cluster,
+                 active: list[JobState]) -> list[int]:
+    """Compact cluster-state fingerprint ``[n_running, n_queued,
+    used_gpus, live_gpus]`` stamped onto flight-recorder decision events
+    (``repro.obs``) so every trace line says what the cluster looked
+    like when the decision was taken."""
+    n_run = n_q = used_g = 0
+    for s in active:
+        if s.status == "running":
+            n_run += 1
+            used_g += s.total_gpus
+        elif s.status == "queued":
+            n_q += 1
+    return [n_run, n_q, used_g, cluster.live_gpus]
+
+
 def check_capacity(cluster: Cluster, jobs: list[JobState]) -> bool:
     """Invariant: no node over-allocated (property-tested)."""
     used = used_per_node(jobs)

@@ -47,6 +47,7 @@ import bisect
 import math
 import weakref
 from dataclasses import dataclass
+from time import perf_counter
 
 from repro.analysis import sanitize_enabled
 from repro.core import memory
@@ -153,6 +154,11 @@ class _PassCtx:
         # read-set of the walk in flight: node ids the walk visited
         self.cur_read: list[int] = []
         self._prune_tick = 0
+        # flight recorder (repro.obs) + the pass's sim time, set by
+        # schedule() each pass BEFORE any event application so wake
+        # emissions carry the right clock; None/0.0 = tracing off
+        self.rec = None
+        self.now = 0.0
 
     # -- membership ----------------------------------------------------
     def register(self, js: JobState) -> None:
@@ -324,9 +330,17 @@ class _PassCtx:
         toks = self.wake_node.pop(nid, None)
         if toks:
             self._wake(toks)
+            if self.rec is not None:
+                # aggregate wake (token count, never token identities —
+                # ids are not stable across runs)
+                self.rec.decision("wake", self.now, cause="node",
+                                  data={"node": nid, "n": len(toks)})
         toks = self.wake_group.pop(self.node_group.get(nid, ""), None)
         if toks:
             self._wake(toks)
+            if self.rec is not None:
+                self.rec.decision("wake", self.now, cause="group",
+                                  data={"node": nid, "n": len(toks)})
 
     def bump_nodes(self, nids) -> None:
         for nid in nids:
@@ -336,6 +350,9 @@ class _PassCtx:
         toks = self.wake_quota.pop(tenant, None)
         if toks:
             self._wake(toks)
+            if self.rec is not None:
+                self.rec.decision("wake", self.now, cause="quota",
+                                  data={"tenant": tenant, "n": len(toks)})
 
     def sig_for(self, js: JobState) -> tuple:
         jid = id(js)
@@ -545,6 +562,10 @@ class RubickScheduler:
         self._order_memo: dict[tuple, list] = {}
         self._memo_cluster: weakref.ref | None = None
         self._ctx: _PassCtx | None = None
+        # flight recorder (repro.obs.FlightRecorder); the simulator
+        # attaches its own when tracing is on.  None = every emit site
+        # collapses to one false branch
+        self.recorder = None
         self._san = None
         if sanitize_enabled(self.cfg):
             # deferred import: the sanitizer recomputes ground truth with
@@ -649,6 +670,8 @@ class RubickScheduler:
         rebuilding, the full engine ignores it — except refits, whose
         identity-keyed memo entries BOTH engines must purge."""
         self._scope_memos(cluster)
+        rec = self.recorder
+        t_pass = perf_counter() if rec is not None else 0.0
         if events is not None and events.refit:
             self._purge_refit_memos(events.refit)
         active = [j for j in jobs if j.status != "done"]
@@ -660,9 +683,19 @@ class RubickScheduler:
             if ctx is None or events is None:
                 # unknown delta (direct call / discrete loop / first
                 # pass): rebuild every index from the live job states
+                t0 = perf_counter() if rec is not None else 0.0
                 ctx = self._rebuild_ctx(active, cluster)
+                if rec is not None:
+                    # lint: nondeterminism — wall-clock profiler span;
+                    # timing only, never a decision input
+                    rec.span_since("rebuild", t0, now)
             else:
+                ctx.rec, ctx.now = rec, now
+                t0 = perf_counter() if rec is not None else 0.0
                 ctx.apply_events(events, self)
+                if rec is not None:
+                    # lint: nondeterminism — wall-clock profiler span
+                    rec.span_since("apply-events", t0, now)
                 if self._members_consistent(ctx, active, events):
                     # only the arrivals are new: O(changed) bookkeeping
                     for js in events.arrived:
@@ -678,7 +711,12 @@ class RubickScheduler:
                     # job list changed outside the event stream (direct
                     # caller mutation): the persistent indices can no
                     # longer be trusted — rebuild from the live states
+                    t0 = perf_counter() if rec is not None else 0.0
                     ctx = self._rebuild_ctx(active, cluster)
+                    if rec is not None:
+                        # lint: nondeterminism — wall-clock profiler span
+                        rec.span_since("rebuild", t0, now)
+            ctx.rec, ctx.now = rec, now
             ctx.build_ledger(active, self.quotas)
             used, by_node = ctx.used, ctx.by_node
         else:
@@ -708,6 +746,7 @@ class RubickScheduler:
         # violated right now, exactly like a capacity-evicted queued job
         # (which kill-and-requeue would put here), so regrowth must not
         # lose capacity races to later-submitted admissions.
+        t0 = perf_counter() if rec is not None else 0.0
         queued_g = [j for j in active if j.status == "queued"
                     and j.job.guaranteed]
         for j in active:
@@ -734,11 +773,18 @@ class RubickScheduler:
                 continue
             self._schedule_job(js, active, cluster, now, used, by_node,
                                ctx, sig)
+        if rec is not None:
+            # lint: nondeterminism — wall-clock profiler span
+            rec.span_since("admission", t0, now, n=len(queued_g))
 
         # --- lines 4-5: best-effort + running, by descending slope --------
         if self.cfg.reallocate_resources:
             if ctx is not None:
+                t0 = perf_counter() if rec is not None else 0.0
                 ctx.refresh_order(self, cluster)
+                if rec is not None:
+                    # lint: nondeterminism — wall-clock profiler span
+                    rec.span_since("slope-order-repair", t0, now)
                 # one fused traversal of the slope order materializes the
                 # starved prefix + the rest (replacing three list
                 # comprehensions); park/gate checks happen at each job's
@@ -761,6 +807,7 @@ class RubickScheduler:
                             starved.append(js)
                         else:
                             normal.append(js)
+                t0 = perf_counter() if rec is not None else 0.0
                 for js in starved + normal:
                     if js.status == "running":
                         jid = id(js)
@@ -777,6 +824,9 @@ class RubickScheduler:
                             continue
                         self._schedule_job(js, active, cluster, now, used,
                                            by_node, ctx, sig)
+                if rec is not None:
+                    # lint: nondeterminism — wall-clock profiler span
+                    rec.span_since("slope-walks", t0, now)
             else:
                 rest = [j for j in active
                         if (j.status == "queued" and not j.job.guaranteed)
@@ -790,9 +840,13 @@ class RubickScheduler:
                     starved_ids = {id(j) for j in starved}
                     rest = starved + [j for j in rest
                                       if id(j) not in starved_ids]
+                t0 = perf_counter() if rec is not None else 0.0
                 for js in rest:
                     self._schedule_job(js, active, cluster, now, used,
                                        by_node, ctx)
+                if rec is not None:
+                    # lint: nondeterminism — wall-clock profiler span
+                    rec.span_since("slope-walks", t0, now)
         else:
             for js in active:
                 if js.status == "queued" and not js.job.guaranteed:
@@ -805,6 +859,10 @@ class RubickScheduler:
                                        by_node, ctx, sig)
         if self._san is not None:
             self._san.end_pass(active, cluster, ctx, self)
+        if rec is not None:
+            # lint: nondeterminism — wall-clock profiler span
+            rec.span_since("pass", t_pass, now,
+                           engine=self.cfg.pass_engine)
 
     def _rebuild_ctx(self, active: list[JobState],
                      cluster: Cluster) -> _PassCtx:
@@ -902,6 +960,7 @@ class RubickScheduler:
         signature when the incremental caller already computed it."""
         if js.status == "running" and not self.cfg.reallocate_resources:
             return
+        rec = self.recorder
         # reconfiguration-penalty time gate (Sec 5.2), evaluated BEFORE the
         # walk (bugfix): if a running job cannot pay another pause yet, no
         # new assignment can be committed, so never shrink victims for it
@@ -918,6 +977,9 @@ class RubickScheduler:
                 and not self._reconfig_gate(js):
             if ctx is not None:
                 ctx.park_gate(js, self, now)
+                if rec is not None:
+                    rec.decision("park", now, job=js.job.name,
+                                 cause="gate")
             return
         failed = None
         if ctx is not None:
@@ -972,7 +1034,14 @@ class RubickScheduler:
                         got_g, got_c, now):
                     committed = True
                     break
-                self._undo(shrunk, ctx)
+                if rec is not None and shrunk:
+                    t0 = perf_counter()
+                    self._undo(shrunk, ctx)
+                    # lint: nondeterminism — wall-clock profiler span
+                    rec.span_since("rollback", t0, now,
+                                   n_victims=len(shrunk))
+                else:
+                    self._undo(shrunk, ctx)
             if committed:
                 if used is not None:
                     # fold the walk's surviving shrinks + the new placement
@@ -1005,19 +1074,70 @@ class RubickScheduler:
                         # is skipped until a node it actually read (or
                         # its own placement) changes
                         ctx.park_noop(js, self)
+                        if rec is not None:
+                            rec.decision("park", now, job=js.job.name,
+                                         cause="noop")
                 elif failed is not None and changed:
                     failed.clear()       # cluster state changed
+                if rec is not None and changed:
+                    self._emit_commit(rec, js, was, shrunk, cluster, env,
+                                      now)
                 return
         if ctx is not None:
             # record the failure post-rollback (cluster state again equals
             # what the walk read): identical state → skip the re-walk
             ctx.park_failed(js, self, cluster,
                             None if js.status == "running" else sig)
+            if rec is not None:
+                rec.decision("park", now, job=js.job.name,
+                             cause="walk-failed")
         elif sig is not None:
             # lint: unscoped-id — pass-local memo: schedule() resets it
             # every pass and the signature referents outlive the pass via
             # the caller's jobs list
             failed.add(sig)
+
+    def _emit_commit(self, rec, js: JobState, was: tuple, shrunk: dict,
+                     cluster: Cluster, env: Env, now: float) -> None:
+        """Flight-recorder provenance for one committed walk: the
+        beneficiary's admit/reconfig event, then one shrink/preempt
+        event per surviving victim carrying the slope at its pre-shrink
+        size — the quantity the victim ranking compared — so every
+        reallocation in a trace is attributable."""
+        status0, plan0, alloc0, placement0 = was
+        old_g = sum(g for g, _, _ in placement0.values())
+        if status0 == "queued":
+            rec.decision("admit", now, job=js.job.name,
+                         data={"gpus": js.total_gpus,
+                               "plan": str(js.plan),
+                               "queued_s": now - js.job.submit})
+        elif (js.plan, js.alloc) != (plan0, alloc0):
+            cause = "grow" if js.total_gpus > old_g else \
+                ("shrink" if js.total_gpus < old_g else "replan")
+            rec.decision("reconfig", now, job=js.job.name, cause=cause,
+                         data={"gpus": [old_g, js.total_gpus],
+                               "plan": [str(plan0), str(js.plan)]})
+        elif js.placement != placement0:
+            rec.decision("reconfig", now, job=js.job.name,
+                         cause="migrate",
+                         data={"gpus": [old_g, js.total_gpus],
+                               "plan": [str(plan0), str(js.plan)]})
+        # lint: nondeterminism — shrunk preserves the walk's first-shrink
+        # insertion order (deterministic), never id() order
+        for entry in shrunk.values():
+            victim, _obj, content, _plan, _alloc, _status, _n = entry
+            vg0 = sum(g for g, _, _ in content.values())
+            if victim.status == "queued":
+                rec.decision("preempt", now, job=victim.job.name,
+                             cause=js.job.name, data={"from_gpus": vg0})
+            else:
+                slope = self.curve(victim, cluster, env) \
+                    .slope_gpu_down(vg0)
+                rec.decision("shrink", now, job=victim.job.name,
+                             cause=js.job.name,
+                             data={"from_gpus": vg0,
+                                   "to_gpus": victim.total_gpus,
+                                   "slope": slope})
 
     @staticmethod
     def _walk_orders(nodes: list, base: dict):

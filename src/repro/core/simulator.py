@@ -72,7 +72,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.cluster import (Cluster, Job, JobState, SchedEvents,
-                                check_capacity)
+                                check_capacity, state_digest)
 from repro.core.fitting import fit_batch
 from repro.core.memory import ckpt_state_bytes, restore_seconds
 from repro.core.oracle import (AnalyticOracle, profiling_requests,
@@ -118,6 +118,13 @@ class SimResult:
     n_cap_events: int = 0             # capacity events applied
     n_shrink_recover: int = 0         # evictions survived by shrinking
     n_kill_requeue: int = 0           # evictions that killed-and-requeued
+    # observability (repro.obs): the run's FlightRecorder when tracing was
+    # on, plus downtime accounting DERIVED from its pause events — the
+    # recorder is the single source of truth, not ad-hoc counters
+    telemetry: object | None = None
+    total_paused_s: float = 0.0       # reconfig + restore pauses, all jobs
+    restore_paused_s: float = 0.0     # checkpoint-restore share of the above
+    downtime_by_job: dict[str, float] = field(default_factory=dict)
 
     @property
     def avg_jct(self) -> float:
@@ -144,6 +151,9 @@ class SimResult:
             out["n_cap_events"] = self.n_cap_events
             out["n_shrink_recover"] = self.n_shrink_recover
             out["n_kill_requeue"] = self.n_kill_requeue
+        if self.total_paused_s:
+            out["total_paused_h"] = self.total_paused_s / 3600
+            out["restore_paused_h"] = self.restore_paused_s / 3600
         for cls, vals in self.jct_by_class.items():
             out[f"avg_jct_{cls}_h"] = float(np.mean(vals)) / 3600 if vals else 0
         return out
@@ -155,7 +165,8 @@ class Simulator:
                  fit_cache: dict | None = None, mode: str = "event",
                  calibration=None, telemetry_interval: float = 300.0,
                  capacity: list | None = None,
-                 ckpt_interval: float = 1800.0):
+                 ckpt_interval: float = 1800.0,
+                 recorder=None):
         self.cluster = cluster
         self.scheduler = scheduler
         self.env = env or Env()
@@ -176,6 +187,18 @@ class Simulator:
         # drifting oracles take the measurement time (the hidden truth
         # moves); static oracles keep their plain signature
         self._drifting = bool(getattr(self.oracle, "drifting", False))
+        # flight recorder (repro.obs.FlightRecorder); None = tracing off.
+        # Every emit site below is a single guarded branch, so a run with
+        # no recorder executes byte-identical decision code.  The one
+        # recorder is threaded into the scheduler (decision/profiler
+        # emits) and the calibration manager (refit emits).
+        self.recorder = recorder
+        if recorder is not None:
+            if getattr(scheduler, "recorder", None) is None:
+                scheduler.recorder = recorder
+            if calibration is not None \
+                    and getattr(calibration, "recorder", None) is None:
+                calibration.recorder = recorder
         self._san = None
         from repro.analysis import sanitize_enabled
         if sanitize_enabled(getattr(scheduler, "cfg", None)):
@@ -315,6 +338,52 @@ class Simulator:
         ``checkpoint.restore_cost_estimate`` applies to real pytrees)."""
         return restore_seconds(ckpt_state_bytes(profile))
 
+    def _sample_metrics(self, fr, t: float, active: list[JobState],
+                        violations: int, thpt_map: dict) -> None:
+        """One time-series sample at an event boundary: utilization,
+        queue depth, per-class goodput (samples/s, paused jobs count 0),
+        cumulative guarantee violations, live capacity — plus the
+        cluster-state digest stamped onto subsequent decision events.
+        ``thpt_map`` is the engine's id(js)-keyed throughput map (keys
+        pinned by the run's states list)."""
+        used_g = used_c = 0
+        used_m = 0.0
+        n_run = n_q = 0
+        good_g = good_b = 0.0
+        for s in active:
+            if s.status == "running":
+                n_run += 1
+                used_g += s.total_gpus
+                used_c += s.total_cpus
+                for _, _, m in s.placement.values():
+                    used_m += m
+                th = 0.0 if s.pause_until > t \
+                    else thpt_map.get(id(s), 0.0)
+                if s.job.guaranteed:
+                    good_g += th
+                else:
+                    good_b += th
+            elif s.status == "queued":
+                n_q += 1
+        live_g = live_c = 0
+        live_m = 0.0
+        for node in self.cluster.nodes:
+            if node.up:
+                live_g += node.gpus
+                live_c += node.cpus
+                live_m += node.mem
+        fr.sample(t,
+                  gpu_util=used_g / max(live_g, 1),
+                  cpu_util=used_c / max(live_c, 1),
+                  hostmem_util=used_m / max(live_m, 1e-9),
+                  queue_depth=n_q,
+                  n_running=n_run,
+                  live_gpus=live_g,
+                  goodput_guaranteed=good_g,
+                  goodput_best_effort=good_b,
+                  violations=violations)
+        fr.set_digest(state_digest(self.cluster, active))
+
     def _apply_capacity(self, batch, active: list[JobState],
                         now: float) -> tuple[list[int], list[int], list]:
         """Apply one instant's capacity events: flip node availability,
@@ -324,6 +393,7 @@ class Simulator:
         engine-specific bookkeeping (completion re-arming, pause events,
         SchedEvents deltas) happens at the call sites."""
         cluster = self.cluster
+        fr = self.recorder
         down: list[int] = []
         up: list[int] = []
         graceful: set[int] = set()
@@ -335,9 +405,16 @@ class Simulator:
                     down.append(ce.node)
                     if ce.warning_s > 0.0:
                         graceful.add(ce.node)
+                    if fr is not None:
+                        fr.decision("capacity", now, data={
+                            "node": ce.node, "kind": ce.kind,
+                            "down": True})
             elif not node.up:
                 node.up = True
                 up.append(ce.node)
+                if fr is not None:
+                    fr.decision("capacity", now, data={
+                        "node": ce.node, "kind": ce.kind, "down": False})
         affected = []
         if down:
             down_set = set(down)
@@ -358,8 +435,13 @@ class Simulator:
         checkpoint-restore pause (shrunk jobs pause in place; killed jobs
         pay it on their next start via ``needs_restore``)."""
         before = dict(s.placement)
+        fr = self.recorder
+        prog0 = s.progress
         if down_set & before.keys() <= graceful:
             s.ckpt_progress = s.progress     # drained during the warning
+            if fr is not None:
+                fr.decision("checkpoint", now, job=s.job.name,
+                            cause="drain")
         else:
             th = self._true_throughput(s, now)
             lag = th * self.ckpt_interval / s.job.profile.b
@@ -375,12 +457,23 @@ class Simulator:
             s.alloc = None
             outcome = "killed"
         if outcome == "shrunk":
+            old_pu = s.pause_until
             s.pause_until = max(s.pause_until,
                                 now + self._restore_cost(s.job.profile))
             s.needs_restore = False
+            if fr is not None:
+                fr.pause(s.job.name, "restore",
+                         s.pause_until - max(old_pu, now), now)
         else:
             s.pause_until = 0.0
             s.needs_restore = True
+        if fr is not None:
+            # the provenance row: which node flips hit this job, what
+            # the recovery chose, and what the rollback cost in work
+            fr.decision("evict", now, job=s.job.name, cause=outcome,
+                        data={"nodes": sorted(down_set & before.keys()),
+                              "lost_iters": prog0 - s.progress,
+                              "kept_gpus": s.total_gpus})
         return s, before, outcome
 
     # ------------------------------------------------------------------
@@ -400,6 +493,13 @@ class Simulator:
         self._prefit(jobs)
         states = [JobState(job=j, fitted=self._fitted(j)) for j in jobs]
         self._prewarm(states)
+        fr = self.recorder
+        if fr is not None:
+            fr.meta.setdefault("engine", "event")
+            fr.meta.setdefault("scheduler",
+                               getattr(self.scheduler, "name", "?"))
+            fr.meta.setdefault("n_jobs", len(states))
+            fr.meta.setdefault("total_gpus", self.cluster.total_gpus)
         cal = self.calibration
         seq = itertools.count()
         heap: list[tuple[float, int, int, object]] = []
@@ -509,6 +609,8 @@ class Simulator:
                     ev_arrived.append(payload)
                     n_pending -= 1
                     state_changed = True
+                    if fr is not None:
+                        fr.decision("arrival", t, job=payload.job.name)
                 elif kind == EV_COMPLETION:
                     s, e = payload
                     if epoch.get(id(s)) != e or s.status != "running":
@@ -523,6 +625,10 @@ class Simulator:
                     active.remove(s)
                     done.append(s)
                     state_changed = True
+                    if fr is not None:
+                        fr.decision("complete", t, job=s.job.name,
+                                    data={"jct": t - s.job.submit,
+                                          "n_reconfig": s.n_reconfig})
                 elif EV_NODE_FAIL <= kind <= EV_SPOT_REVOKE:
                     cap_batch.append(payload)
                 elif kind == EV_PAUSE_END:
@@ -602,12 +708,17 @@ class Simulator:
                                 # killed by a capacity loss: the restart
                                 # reloads the checkpoint before training
                                 s.needs_restore = False
+                                old_pu = s.pause_until
                                 s.pause_until = max(
                                     s.pause_until,
                                     t + self._restore_cost(s.job.profile))
                                 heapq.heappush(heap, (s.pause_until,
                                                       EV_PAUSE_END,
                                                       next(seq), s))
+                                if fr is not None:
+                                    fr.pause(s.job.name, "restore",
+                                             s.pause_until
+                                             - max(old_pu, t), t)
                             resample(s, t)
                         elif (s.plan, s.alloc) != was[:2]:
                             # checkpoint-resume: the reconfiguration saves
@@ -615,11 +726,19 @@ class Simulator:
                             # at most to here.  max() keeps a restore
                             # pause charged this instant from shrinking.
                             s.ckpt_progress = s.progress
+                            old_pu = s.pause_until
                             s.pause_until = max(s.pause_until,
                                                 t + self.reconfig_cost)
                             heapq.heappush(heap, (s.pause_until,
                                                   EV_PAUSE_END, next(seq),
                                                   s))
+                            if fr is not None:
+                                fr.decision("checkpoint", t,
+                                            job=s.job.name,
+                                            cause="reconfig")
+                                fr.pause(s.job.name, "reconfig",
+                                         s.pause_until - max(old_pu, t),
+                                         t)
                             resample(s, t)
                         elif s.placement != was[3]:
                             # migrated with identical plan+alloc: the env
@@ -637,6 +756,8 @@ class Simulator:
                     violations += check_guarantee(s, t)
             for s in resumed:
                 violations += check_guarantee(s, t)
+            if fr is not None:
+                self._sample_metrics(fr, t, active, violations, thpt)
 
         self.last_states = states          # inspectable by tests/benchmarks
         return self._assemble(active + done, t, violations,
@@ -651,6 +772,13 @@ class Simulator:
         self._prefit(jobs)
         states = [JobState(job=j, fitted=self._fitted(j)) for j in jobs]
         self._prewarm(states)
+        fr = self.recorder
+        if fr is not None:
+            fr.meta.setdefault("engine", "discrete")
+            fr.meta.setdefault("scheduler",
+                               getattr(self.scheduler, "name", "?"))
+            fr.meta.setdefault("n_jobs", len(states))
+            fr.meta.setdefault("total_gpus", self.cluster.total_gpus)
         cal = self.calibration
         arrivals = sorted(states, key=lambda s: s.job.submit)
         t = 0.0
@@ -672,7 +800,10 @@ class Simulator:
                 and t < max_time:
             # admit arrivals at time t
             while pending and pending[0].job.submit <= t + 1e-9:
-                active.append(pending.pop(0))
+                js = pending.pop(0)
+                active.append(js)
+                if fr is not None:
+                    fr.decision("arrival", t, job=js.job.name)
 
             # apply due capacity events (the dt clamp below lands the loop
             # exactly on each event time, mirroring the event engine)
@@ -703,14 +834,24 @@ class Simulator:
                     # checkpoint-resume: saves a checkpoint (bounds a
                     # later failure's rollback), then pauses for δ
                     s.ckpt_progress = s.progress
+                    old_pu = s.pause_until
                     s.pause_until = max(s.pause_until,
                                         t + self.reconfig_cost)
+                    if fr is not None:
+                        fr.decision("checkpoint", t, job=s.job.name,
+                                    cause="reconfig")
+                        fr.pause(s.job.name, "reconfig",
+                                 s.pause_until - max(old_pu, t), t)
                 elif s.needs_restore:
                     # killed by a capacity loss, restarted this pass: the
                     # restart reloads the checkpoint before training
                     s.needs_restore = False
+                    old_pu = s.pause_until
                     s.pause_until = max(s.pause_until,
                                         t + self._restore_cost(s.job.profile))
+                    if fr is not None:
+                        fr.pause(s.job.name, "restore",
+                                 s.pause_until - max(old_pu, t), t)
 
             # compute throughputs (paused jobs contribute 0 until resumed)
             thpts = {}
@@ -736,6 +877,9 @@ class Simulator:
                         and thpts[id(s)]
                         < s.baseline_perf * (1.0 - GUARANTEE_TOL)):
                     violations += 1
+
+            if fr is not None:
+                self._sample_metrics(fr, t, active, violations, thpts)
 
             # periodic telemetry + drift-triggered refits (the refit takes
             # effect at the NEXT pass — this loop rebuilds scheduler state
@@ -800,6 +944,11 @@ class Simulator:
                     s.status = "done"
                     s.finish_time = t + dt
                     s.placement = {}
+                    if fr is not None:
+                        fr.decision("complete", t + dt, job=s.job.name,
+                                    data={"jct": s.finish_time
+                                          - s.job.submit,
+                                          "n_reconfig": s.n_reconfig})
             t += dt
 
         self.last_states = states          # inspectable by tests/benchmarks
@@ -825,10 +974,19 @@ class Simulator:
             n_rcfg += s.n_reconfig
         makespan = max((s.finish_time for s in arrived), default=0.0)
         keys = {fit_key(s.job.profile) for s in arrived}
-        return SimResult(getattr(self.scheduler, "name", "?"), jcts,
-                         makespan, n_rcfg, violations, by_class,
-                         n_events=n_events, n_sched_calls=n_sched,
-                         unfitted=sorted({k[0] for k in
-                                          self._unfitted & keys}),
-                         n_refits=n_refits, n_cap_events=n_cap,
-                         n_shrink_recover=n_shrink, n_kill_requeue=n_kill)
+        res = SimResult(getattr(self.scheduler, "name", "?"), jcts,
+                        makespan, n_rcfg, violations, by_class,
+                        n_events=n_events, n_sched_calls=n_sched,
+                        unfitted=sorted({k[0] for k in
+                                         self._unfitted & keys}),
+                        n_refits=n_refits, n_cap_events=n_cap,
+                        n_shrink_recover=n_shrink, n_kill_requeue=n_kill)
+        fr = self.recorder
+        if fr is not None:
+            # downtime surfaced on the result is DERIVED from the
+            # recorder's pause events — one source of truth
+            res.telemetry = fr
+            res.total_paused_s = fr.total_paused_s
+            res.restore_paused_s = fr.pause_s.get("restore", 0.0)
+            res.downtime_by_job = fr.downtime_by_job()
+        return res

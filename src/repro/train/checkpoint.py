@@ -26,6 +26,7 @@ import shutil
 import tempfile
 import threading
 from pathlib import Path
+from time import perf_counter
 from typing import Any
 
 import jax
@@ -70,11 +71,12 @@ def _unflatten_into(template: Any, arrays: dict[str, np.ndarray]) -> Any:
 
 class CheckpointManager:
     def __init__(self, directory: str | Path, keep_last: int = 3,
-                 async_save: bool = True):
+                 async_save: bool = True, recorder: Any | None = None):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep_last = keep_last
         self.async_save = async_save
+        self.recorder = recorder       # flight recorder (repro.obs), opt-in
         self._thread: threading.Thread | None = None
 
     # ------------------------------------------------------------------
@@ -90,6 +92,7 @@ class CheckpointManager:
         target = self.dir / f"step_{step:09d}"
 
         def _write():
+            t0 = perf_counter()
             tmp = Path(tempfile.mkdtemp(dir=self.dir, prefix=".tmp_"))
             np.savez(tmp / "arrays.npz", **arrays)
             # meta.json is the latest-checkpoint pointer: write-to-temp +
@@ -112,6 +115,10 @@ class CheckpointManager:
             finally:
                 os.close(fd)
             self._gc()
+            if self.recorder is not None:
+                nbytes = sum(a.nbytes for a in arrays.values())
+                self.recorder.span("checkpoint-save", t0, perf_counter(),
+                                   float(step), bytes=nbytes)
 
         if self.async_save and not block:
             self._thread = threading.Thread(target=_write, daemon=True)
@@ -165,6 +172,7 @@ class CheckpointManager:
                 shardings: Any | None = None, opt_shardings: Any | None = None,
                 ) -> tuple[Any, Any | None, dict]:
         """Restore onto possibly-different shardings (elastic restart)."""
+        t0 = perf_counter()
         self.wait()
         step = step if step is not None else self.latest_step()
         if step is None:
@@ -182,4 +190,7 @@ class CheckpointManager:
             if opt_shardings is not None:
                 opt = jax.tree.map(
                     lambda a, s: jax.device_put(a, s), opt, opt_shardings)
+        if self.recorder is not None:
+            self.recorder.span("checkpoint-restore", t0, perf_counter(),
+                               float(step))
         return params, opt, meta

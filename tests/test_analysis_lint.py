@@ -285,6 +285,62 @@ def test_determinism_flags_id_ordered_iteration():
     """) == []
 
 
+def test_determinism_flags_print_and_logging_on_decision_paths():
+    vs = _check(DeterminismRule(), """
+        import logging
+
+        def decide(js):
+            print("admitting", js)
+            logging.getLogger("sched").info("admit %s", js)
+    """)
+    assert all(v.rule == "nondeterminism" for v in vs)
+    msgs = " | ".join(v.message for v in vs)
+    assert "print()" in msgs and "getLogger" in msgs
+    assert len(vs) == 2
+
+
+def test_determinism_requires_waiver_on_span_emits():
+    src = """
+        from time import perf_counter
+
+        def schedule(self, rec, now):
+            t0 = perf_counter()
+            rec.span_since("pass", t0, now)
+    """
+    vs = _check(DeterminismRule(), src)
+    assert [v.rule for v in vs] == ["nondeterminism"]
+    assert "span" in vs[0].message and "Perfetto" in vs[0].message
+    # the explicit waiver acknowledges the sanctioned wall-clock channel
+    mod = _mod("""
+        from time import perf_counter
+
+        def schedule(self, rec, now):
+            t0 = perf_counter()
+            # lint: nondeterminism -- profiler span, wall clock by design
+            rec.span_since("pass", t0, now)
+    """)
+    vs = [v for v in DeterminismRule().check(mod)
+          if not mod.waived(v.line, v.rule)]
+    assert vs == []
+
+
+def test_determinism_flags_wallclock_fed_into_decision_channel():
+    vs = _check(DeterminismRule(), """
+        from time import perf_counter
+
+        def admit(rec, js, now):
+            rec.decision("admit", perf_counter(), job=js.name)
+    """)
+    assert [v.rule for v in vs] == ["nondeterminism"]
+    assert "perf_counter" in vs[0].message and "sim time" in vs[0].message
+    # sim-time arguments are what the channel is for
+    assert _check(DeterminismRule(), """
+        def admit(rec, js, now):
+            rec.decision("admit", now, job=js.name)
+            rec.sample(now, gpu_util=0.5)
+    """) == []
+
+
 # --- shape-contract ----------------------------------------------------------
 
 def test_shape_contract_flags_missing_block_and_params():

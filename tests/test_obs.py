@@ -1,0 +1,311 @@
+"""Flight recorder (ISSUE 9 tentpole): decision traces, time-series
+metrics, pass profiling.
+
+The two contracts everything else hangs off:
+
+  * **zero-cost when disabled** — a run with no recorder attached makes
+    byte-identical decisions to a traced run (pinned across schedulers,
+    engines, and a capacity storm);
+  * **deterministic JSONL** — two traced runs of the same seed export
+    byte-identical decision logs (wall-clock lives only in the Perfetto
+    channel), so traces diff cleanly across commits.
+
+Plus: schema round-trips reject malformed events, every eviction in a
+storm trace is attributable to its triggering capacity event, pause
+accounting on ``SimResult`` matches the recorder's ledger, ring buffers
+record what they drop, and tracing overhead stays under 1.10x on the
+smoke-sized storm.
+"""
+
+import json
+import time
+
+import pytest
+
+from repro.core import baselines, trace
+from repro.core.cluster import Cluster
+from repro.core.simulator import Simulator
+from repro.obs import (KINDS, FlightRecorder, TraceSchemaError, read_jsonl,
+                       trace_enabled, validate_event, validate_events,
+                       write_jsonl, write_perfetto)
+from repro.obs.export import KIND_FIELDS
+from repro.obs.recorder import _Ring
+from repro.obs.report import attribution, diff, summary
+from repro.obs.report import validate as report_validate
+
+FIT_CACHE: dict = {}
+
+
+def _storm_setup(seed=11):
+    cluster = Cluster(n_nodes=6)
+    jobs = trace.generate(n_jobs=16, hours=4, seed=seed, load_scale=2.0)
+    cap = trace.failure_storm(6, 86400.0, seed=1, mtbf_s=86400.0,
+                              storm=(5000.0, 20000.0, 40.0))
+    return cluster, jobs, cap
+
+
+def _run(sched_name="rubick", engine="incremental", mode="event",
+         recorder=None, seed=11):
+    cluster, jobs, cap = _storm_setup(seed=seed)
+    sched = baselines.ALL[sched_name](pass_engine=engine)
+    sim = Simulator(cluster, sched, fit_cache=FIT_CACHE, mode=mode,
+                    capacity=cap, recorder=recorder)
+    return sim.run(jobs, max_time=4 * 86400.0)
+
+
+def _decisions(res):
+    return (res.jcts, res.makespan, res.n_reconfig, res.n_events,
+            res.guarantee_violations, res.n_cap_events,
+            res.n_shrink_recover, res.n_kill_requeue)
+
+
+# --- zero-cost-when-disabled: decision parity --------------------------------
+
+@pytest.mark.parametrize("sched_name", ["rubick", "antman", "synergy"])
+@pytest.mark.parametrize("engine", ["incremental", "full"])
+def test_recorder_off_bit_exact(sched_name, engine):
+    off = _run(sched_name, engine)
+    rec = FlightRecorder()
+    on = _run(sched_name, engine, recorder=rec)
+    assert _decisions(off) == _decisions(on)
+    assert rec.events.n_total > 0
+
+
+def test_recorder_off_bit_exact_discrete_engine():
+    off = _run(mode="discrete")
+    on = _run(mode="discrete", recorder=FlightRecorder())
+    assert _decisions(off) == _decisions(on)
+
+
+def test_recorder_off_bit_exact_hetero():
+    from repro.core.cluster import hetero_cluster
+    jobs = trace.generate(n_jobs=10, hours=3, seed=5, variant="hetero")
+    cap = trace.failure_storm(4, 86400.0, seed=5, mtbf_s=86400.0,
+                              storm=(1800.0, 4 * 3600.0, 15.0))
+
+    def go(rec):
+        cluster = hetero_cluster([("a800", 2), ("v100", 2)])
+        sched = baselines.make_rubick(pass_engine="incremental")
+        return Simulator(cluster, sched, fit_cache=FIT_CACHE,
+                         capacity=cap, recorder=rec).run(
+                             jobs, max_time=4 * 86400.0)
+
+    assert _decisions(go(None)) == _decisions(go(FlightRecorder()))
+
+
+# --- deterministic export ----------------------------------------------------
+
+def test_jsonl_export_deterministic(tmp_path):
+    paths = []
+    for i in range(2):
+        rec = FlightRecorder(meta={"case": "determinism"})
+        _run(recorder=rec)
+        p = tmp_path / f"run{i}.jsonl"
+        write_jsonl(rec, p)
+        paths.append(p)
+    assert paths[0].read_bytes() == paths[1].read_bytes()
+
+
+def test_jsonl_has_no_wallclock_fields(tmp_path):
+    rec = FlightRecorder()
+    _run(recorder=rec)
+    assert rec.spans.n_total > 0          # profiler DID run...
+    p = tmp_path / "t.jsonl"
+    write_jsonl(rec, p)
+    # ...but no span/wall-clock content reaches the decision log
+    for line in p.read_text().splitlines():
+        row = json.loads(line)
+        assert "span" not in json.dumps(row)
+        assert "t0" not in row and "t1" not in row
+
+
+# --- schema ------------------------------------------------------------------
+
+def test_schema_round_trip(tmp_path):
+    rec = FlightRecorder(meta={"engine": "event"})
+    _run(recorder=rec)
+    p = tmp_path / "t.jsonl"
+    write_jsonl(rec, p)
+    tr = read_jsonl(p)
+    assert validate_events(tr.events) == len(tr.events) > 0
+    assert tr.meta["schema"] == "rubick-flight/1"
+    assert tr.meta["meta"]["engine"] == "event"
+    assert set(tr.counts) <= set(KINDS)
+    assert tr.counts == rec.counts
+    # series round-trip with drop counts
+    assert set(tr.series) == set(rec.series)
+    for name, ring in rec.series.items():
+        assert tr.series[name] == [list(pt) for pt in ring] \
+            or tr.series[name] == list(ring)
+
+
+def test_schema_rejects_malformed_events():
+    with pytest.raises(TraceSchemaError):
+        validate_event({"seq": 1, "t": 0.0, "kind": "no-such-kind"})
+    with pytest.raises(TraceSchemaError):
+        validate_event({"seq": 1, "kind": "arrival"})        # no t
+    with pytest.raises(TraceSchemaError):
+        validate_event({"seq": 1, "t": -5.0, "kind": "arrival",
+                        "job": "a"})                          # t < 0
+    with pytest.raises(TraceSchemaError):                     # missing job
+        validate_event({"seq": 1, "t": 0.0, "kind": "arrival"})
+    with pytest.raises(TraceSchemaError):                     # seq order
+        validate_events([
+            {"seq": 2, "t": 0.0, "kind": "arrival", "job": "a"},
+            {"seq": 1, "t": 0.0, "kind": "arrival", "job": "b"}])
+
+
+def test_kind_fields_cover_every_kind():
+    assert set(KIND_FIELDS) == set(KINDS)
+
+
+# --- provenance: every eviction attributable ---------------------------------
+
+def test_evictions_attributable_to_capacity_events(tmp_path):
+    rec = FlightRecorder()
+    res = _run(recorder=rec)
+    assert res.n_cap_events > 0, "storm scenario must exercise capacity"
+    p = tmp_path / "storm.jsonl"
+    write_jsonl(rec, p)
+    rows = attribution(read_jsonl(p))
+    assert len(rows) == rec.counts.get("evict", 0)
+    assert rows, "storm scenario must evict someone"
+    for r in rows:
+        assert r["triggers"], f"unattributed eviction {r}"
+        assert r["outcome"] in ("shrunk", "killed")
+        trig_nodes = {t["node"] for t in r["triggers"]}
+        assert trig_nodes <= set(r["lost_nodes"])
+
+
+def test_shrink_events_carry_victim_and_slope(tmp_path):
+    # drive Rubick into shrink walks: a packed cluster + late arrival
+    rec = FlightRecorder()
+    _run(recorder=rec, seed=7)
+    shrinks = [e for e in rec.events if e["kind"] == "shrink"]
+    for ev in shrinks:
+        assert ev["cause"]                      # the beneficiary job
+        assert ev["data"]["from_gpus"] > ev["data"]["to_gpus"] >= 0
+        assert "slope" in ev["data"]
+        assert "digest" in ev and len(ev["digest"]) == 4
+
+
+# --- downtime accounting -----------------------------------------------------
+
+def test_pause_accounting_matches_result_fields():
+    rec = FlightRecorder()
+    res = _run(recorder=rec)
+    assert res.telemetry is rec
+    assert res.total_paused_s == pytest.approx(rec.total_paused_s)
+    assert res.restore_paused_s == pytest.approx(
+        rec.pause_s.get("restore", 0.0))
+    assert res.total_paused_s > 0, "storm must charge some downtime"
+    by_job = res.downtime_by_job
+    assert by_job == rec.downtime_by_job()
+    assert sum(by_job.values()) == pytest.approx(res.total_paused_s)
+    # every pause event's seconds sum back to the ledger
+    emitted = sum(e["data"]["seconds"] for e in rec.events
+                  if e["kind"] == "pause")
+    assert emitted == pytest.approx(res.total_paused_s)
+
+
+# --- profiler ----------------------------------------------------------------
+
+def test_pass_profiler_records_phase_spans(tmp_path):
+    rec = FlightRecorder()
+    _run(recorder=rec, engine="incremental")
+    totals = rec.span_totals()
+    assert "pass" in totals
+    assert {"admission", "slope-walks"} <= set(totals)
+    for agg in totals.values():
+        assert agg["n"] > 0 and agg["total_s"] >= 0.0
+    p = tmp_path / "t.perfetto.json"
+    write_perfetto(rec, p)
+    doc = json.loads(p.read_text())
+    phases = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    instants = [e for e in doc["traceEvents"] if e.get("ph") == "i"]
+    assert phases and instants
+    assert all(e["dur"] >= 0 for e in phases)
+
+
+# --- ring buffers ------------------------------------------------------------
+
+def test_ring_buffer_counts_drops():
+    ring = _Ring(4)
+    for i in range(10):
+        ring.append(i)
+    assert ring.n_total == 10
+    assert ring.n_dropped == 6
+    assert list(ring) == [6, 7, 8, 9]
+
+
+def test_recorder_caps_are_enforced(tmp_path):
+    rec = FlightRecorder(max_events=16, max_samples=8)
+    _run(recorder=rec)
+    assert len(rec.events) <= 16
+    assert rec.events.n_dropped == rec.events.n_total - len(rec.events)
+    p = tmp_path / "t.jsonl"
+    write_jsonl(rec, p)
+    tr = read_jsonl(p)
+    assert tr.meta["n_events_dropped"] == rec.events.n_dropped > 0
+
+
+# --- report CLI --------------------------------------------------------------
+
+def test_report_summary_diff_validate(tmp_path, capsys):
+    pa, pb = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+    ra, rb = FlightRecorder(), FlightRecorder()
+    _run(recorder=ra, seed=11)
+    _run(recorder=rb, seed=12)
+    write_jsonl(ra, pa)
+    write_jsonl(rb, pb)
+    pf = tmp_path / "a.perfetto.json"
+    write_perfetto(ra, pf)
+    assert summary(str(pa), perfetto=str(pf)) == 0
+    assert diff(str(pa), str(pb)) == 0
+    assert report_validate([str(pa), str(pb)]) == 0
+    out = capsys.readouterr().out
+    assert "profiler phases" in out
+    assert "ok (" in out
+
+
+def test_report_validate_rejects_corrupt_trace(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    rec = FlightRecorder()
+    rec.decision("arrival", 1.0, job="a")
+    write_jsonl(rec, p)
+    lines = p.read_text().splitlines()
+    lines.append(json.dumps({"seq": 99, "t": 0.0, "kind": "bogus"}))
+    p.write_text("\n".join(lines) + "\n")
+    assert report_validate([str(p)]) == 1
+
+
+# --- overhead ----------------------------------------------------------------
+
+def test_tracing_overhead_under_smoke_budget():
+    """Tracing must cost < 10% wall-clock on the smoke storm (min-of-N
+    so scheduler noise doesn't flake the gate)."""
+    def best(recorder_factory, n=3):
+        t = float("inf")
+        for _ in range(n):
+            rec = recorder_factory()
+            t0 = time.perf_counter()
+            _run(recorder=rec)
+            t = min(t, time.perf_counter() - t0)
+        return t
+
+    _run()                                   # warm fit cache + imports
+    t_off = best(lambda: None)
+    t_on = best(FlightRecorder)
+    assert t_on < t_off * 1.10 + 0.05, \
+        f"tracing overhead {t_on / t_off:.3f}x exceeds 1.10x"
+
+
+def test_trace_enabled_env(monkeypatch):
+    monkeypatch.delenv("REPRO_TRACE", raising=False)
+    assert not trace_enabled()
+    monkeypatch.setenv("REPRO_TRACE", "0")
+    assert not trace_enabled()
+    monkeypatch.setenv("REPRO_TRACE", "1")
+    assert trace_enabled()
+    monkeypatch.setenv("REPRO_TRACE", "no")
+    assert not trace_enabled()
