@@ -119,15 +119,18 @@ def _traced_export(rec, mode: str) -> dict:
             "n_trace_dropped": rec.events.n_dropped}
 
 
-def storm_rows(cache, smoke: bool, traced: bool = False) -> list[dict]:
+def storm_rows(cache, smoke: bool, traced: bool = False,
+               seed: int = 0) -> list[dict]:
     if smoke:
-        n_nodes, jobs = 4, storm_fleet(2, 2, 3 * 3600.0, 4 * 3600.0)
-        cap = trace.failure_storm(n_nodes, HORIZON_S, seed=11,
+        n_nodes = 4
+        jobs = storm_fleet(2, 2, 3 * 3600.0, 4 * 3600.0, seed=seed)
+        cap = trace.failure_storm(n_nodes, HORIZON_S, seed=seed + 11,
                                   mtbf_s=4 * 86400.0, mttr_s=3600.0,
                                   storm=(3600.0, 3 * 3600.0, 20.0))
     else:
-        n_nodes, jobs = 8, storm_fleet(5, 4, 4 * 3600.0, 5 * 3600.0)
-        cap = trace.failure_storm(n_nodes, HORIZON_S, seed=11,
+        n_nodes = 8
+        jobs = storm_fleet(5, 4, 4 * 3600.0, 5 * 3600.0, seed=seed)
+        cap = trace.failure_storm(n_nodes, HORIZON_S, seed=seed + 11,
                                   mtbf_s=4 * 86400.0, mttr_s=2 * 3600.0,
                                   storm=(5400.0, 6 * 3600.0, 25.0))
     rows, by_mode = [], {}
@@ -165,14 +168,16 @@ def storm_rows(cache, smoke: bool, traced: bool = False) -> list[dict]:
     return rows
 
 
-def spot_row(cache, smoke: bool) -> dict:
+def spot_row(cache, smoke: bool, seed: int = 0) -> dict:
     n_reg, n_spot = (1, 1) if smoke else (3, 2)
     cluster = Cluster(n_nodes=n_reg)
     spot = cluster.add_spot_nodes(n_spot)
     n_jobs = 4 if smoke else 12
-    jobs = trace.generate(n_jobs=n_jobs, hours=3, seed=7, load_scale=2.0)
-    cap = trace.spot_churn(spot, HORIZON_S, seed=3, period_s=6 * 3600.0,
-                           window_frac=0.5, jitter_s=600.0)
+    jobs = trace.generate(n_jobs=n_jobs, hours=3, seed=seed + 7,
+                          load_scale=2.0)
+    cap = trace.spot_churn(spot, HORIZON_S, seed=seed + 3,
+                           period_s=6 * 3600.0, window_frac=0.5,
+                           jitter_s=600.0)
     t0 = time.perf_counter()
     res, sim = _run(cluster, jobs, cache, capacity=cap)
     secs = time.perf_counter() - t0
@@ -184,7 +189,7 @@ def spot_row(cache, smoke: bool) -> dict:
                         "spot_nodes": n_spot}}
 
 
-def parity_row(cache, smoke: bool) -> dict:
+def parity_row(cache, smoke: bool, seed: int = 0) -> dict:
     """Incremental vs full pass engine, bit-exact, under combined node
     failures + spot churn.  This is the gate that capacity-change dirty
     sets keep the incremental indices truthful."""
@@ -193,12 +198,12 @@ def parity_row(cache, smoke: bool) -> dict:
     cluster_a, cluster_b = Cluster(n_nodes=n_reg), Cluster(n_nodes=n_reg)
     spot_a = cluster_a.add_spot_nodes(1)
     cluster_b.add_spot_nodes(1)
-    jobs = trace.philly(n_jobs=n_jobs, hours=4, seed=13, variant="base",
-                        load_scale=3.0)
-    cap = (trace.failure_storm(n_reg, HORIZON_S, seed=21,
+    jobs = trace.philly(n_jobs=n_jobs, hours=4, seed=seed + 13,
+                        variant="base", load_scale=3.0)
+    cap = (trace.failure_storm(n_reg, HORIZON_S, seed=seed + 21,
                                mtbf_s=6 * 3600.0, mttr_s=1800.0,
                                storm=(3600.0, 5 * 3600.0, 8.0))
-           + trace.spot_churn(spot_a, HORIZON_S, seed=22,
+           + trace.spot_churn(spot_a, HORIZON_S, seed=seed + 22,
                               period_s=6 * 3600.0, window_frac=0.5,
                               jitter_s=600.0))
     cap.sort(key=lambda e: e.time)
@@ -219,23 +224,32 @@ def parity_row(cache, smoke: bool) -> dict:
         "decision_parity": bool(fp == fq)}}
 
 
-def run(smoke: bool = False, traced: bool | None = None) -> list[dict]:
+def run(smoke: bool = False, traced: bool | None = None,
+        seed: int = 0) -> list[dict]:
     if traced is None:
         from repro.obs import trace_enabled
         traced = trace_enabled()
     cache = _artifacts.prewarmed_fit_cache()
-    rows = storm_rows(cache, smoke, traced=traced)
-    rows.append(spot_row(cache, smoke))
-    rows.append(parity_row(cache, smoke))
+    rows = storm_rows(cache, smoke, traced=traced, seed=seed)
+    rows.append(spot_row(cache, smoke, seed=seed))
+    rows.append(parity_row(cache, smoke, seed=seed))
     _artifacts.write_bench_json("failures", rows, extra={
-        "smoke": smoke, "sanitize": sanitize_enabled()})
+        "smoke": smoke, "seed": seed, "sanitize": sanitize_enabled()})
     return rows
+
+
+def _seed_arg(argv: list[str]) -> int:
+    """Parse ``--seed N`` (default 0) — shifts every trace-generator
+    seed so CI can check gates hold on more than one sampled storm."""
+    if "--seed" in argv:
+        return int(argv[argv.index("--seed") + 1])
+    return 0
 
 
 def main(argv: list[str]) -> int:
     smoke = "--smoke" in argv
     traced = True if "--trace" in argv else None
-    rows = run(smoke=smoke, traced=traced)
+    rows = run(smoke=smoke, traced=traced, seed=_seed_arg(argv))
     by_name = {}
     for row in rows:
         print(row["name"], row["derived"])

@@ -1,0 +1,233 @@
+"""Gray-failure resilience: straggler mitigation vs ignoring, flaky ops.
+
+Acceptance (ISSUE 10):
+  * mitigation — under a degradation storm (throttled / hung nodes that
+    stay "up"), health-monitor quarantine + migrate-away beats ignoring
+    the stragglers on BOTH average JCT and guarantee violations;
+  * flaky ops — reconfigure / restore operations fail and retry with
+    bounded exponential backoff; exhausted reconfigs provably roll back
+    (the sanitizer asserts the restored plan/alloc/placement);
+  * parity — the incremental pass engine stays bit-exact with the full
+    engine under combined degradation + capacity churn + flaky ops
+    (quarantine/migrate/rollback all flow through dirty sets).
+
+Both arms of the mitigation comparison run the SAME degradation trace
+on the same fleet under the DISCRETE engine (violations are sampled per
+fixed step, so counts are time-uniform across arms); the ignore arm
+carries a PASSIVE monitor (``suspect_ratio=inf`` — it observes on the
+identical telemetry cadence but never blames), so the JCT/violation
+delta is attributable purely to quarantine + migrate-away decisions.
+
+    PYTHONPATH=src python -m benchmarks.bench_grayfail [--smoke]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import _artifacts
+from benchmarks.bench_failures import _goodput, _seed_arg
+from repro.analysis import sanitize_enabled
+from repro.core import baselines, trace
+from repro.core.cluster import Cluster
+from repro.core.simulator import Simulator
+from repro.health import FlakyConfig, FlakyOps, HealthConfig, HealthMonitor
+
+HORIZON_S = 86400.0
+
+
+def passive_monitor() -> HealthMonitor:
+    """A monitor that consumes telemetry on the normal cadence but can
+    never blame — the control arm ticks identically to the treatment
+    arm, isolating the effect of acting on the detections."""
+    return HealthMonitor(HealthConfig(suspect_ratio=float("inf")))
+
+
+def _run(cluster, jobs, cache, *, engine="incremental", mode="event",
+         capacity=None, degradation=None, health=None, flaky=None,
+         recorder=None):
+    sched = baselines.make_rubick(pass_engine=engine)
+    sim = Simulator(cluster, sched, fit_cache=dict(cache), mode=mode,
+                    capacity=capacity, degradation=degradation,
+                    health=health, flaky=flaky, recorder=recorder)
+    res = sim.run(jobs, max_time=7 * HORIZON_S)
+    return res, sim
+
+
+def _metrics(res, sim) -> dict:
+    return {"avg_jct_h": round(res.avg_jct / 3600, 4),
+            "makespan_h": round(res.makespan / 3600, 3),
+            "violations": res.guarantee_violations,
+            "goodput_iters_per_gpu_h": round(_goodput(sim, res), 2),
+            "n_degrade_events": res.n_degrade_events,
+            "n_quarantined": res.n_quarantined,
+            "n_migrate": res.n_migrate,
+            "n_op_retries": res.n_op_retries,
+            "n_op_rollbacks": res.n_op_rollbacks,
+            "n_reconfig": res.n_reconfig}
+
+
+def _world(smoke: bool, seed: int):
+    """One degradation-storm scenario: an elastic mixed fleet (jobs can
+    shrink when migrated off a quarantined node) on a contended
+    cluster, sustained multi-hour slowdowns on a few nodes."""
+    if smoke:
+        n_nodes = 4
+        jobs = trace.generate(n_jobs=16, hours=6, seed=seed + 4,
+                              load_scale=3.0)
+    else:
+        n_nodes = 8
+        jobs = trace.generate(n_jobs=28, hours=8, seed=seed + 4,
+                              load_scale=3.0)
+    deg = trace.degradation_storm(
+        n_nodes, HORIZON_S, seed=seed + 17, mtbd_s=4 * 3600.0,
+        mttr_s=2 * 3600.0, slowdown=(3.0, 6.0),
+        storm=(1800.0, 8 * 3600.0, 4.0))
+    return n_nodes, jobs, deg
+
+
+def _traced_export(rec, arm: str) -> dict:
+    from repro.obs import validate_events, write_jsonl, write_perfetto
+    base = _artifacts.out_dir() / f"TRACE_grayfail_{arm}"
+    jsonl = base.with_suffix(".jsonl")
+    write_jsonl(rec, jsonl)
+    write_perfetto(rec, base.with_suffix(".perfetto.json"))
+    validate_events(list(rec.events))
+    return {"trace_jsonl": str(jsonl),
+            "n_trace_events": rec.events.n_total}
+
+
+def mitigation_rows(cache, smoke: bool, traced: bool = False,
+                    seed: int = 0) -> list[dict]:
+    n_nodes, jobs, deg = _world(smoke, seed)
+    rows, by_arm = [], {}
+    for arm in ("mitigate", "ignore"):
+        rec = None
+        if traced:
+            from repro.obs import FlightRecorder
+            rec = FlightRecorder(meta={"bench": "grayfail", "arm": arm})
+        hm = HealthMonitor(HealthConfig()) if arm == "mitigate" \
+            else passive_monitor()
+        t0 = time.perf_counter()
+        res, sim = _run(Cluster(n_nodes=n_nodes), jobs, cache,
+                        mode="discrete", degradation=deg, health=hm,
+                        recorder=rec)
+        secs = time.perf_counter() - t0
+        by_arm[arm] = res
+        derived = {**_metrics(res, sim), "wall_s": round(secs, 2),
+                   "n_jobs": len(jobs), "gpus": n_nodes * 8}
+        if rec is not None:
+            derived.update(_traced_export(rec, arm))
+        rows.append({"name": f"grayfail/storm_{arm}",
+                     "us_per_call": secs / max(res.n_sched_calls, 1) * 1e6,
+                     "derived": derived})
+    m, i = by_arm["mitigate"], by_arm["ignore"]
+    rows.append({"name": "grayfail/mitigate_vs_ignore", "derived": {
+        "jct_mitigate_h": round(m.avg_jct / 3600, 4),
+        "jct_ignore_h": round(i.avg_jct / 3600, 4),
+        "jct_delta_pct": round((i.avg_jct - m.avg_jct)
+                               / max(i.avg_jct, 1e-9) * 100, 2),
+        "viol_mitigate": m.guarantee_violations,
+        "viol_ignore": i.guarantee_violations,
+        "n_quarantined": m.n_quarantined,
+        "pass_mitigate_beats_ignore": bool(
+            m.avg_jct < i.avg_jct
+            and m.guarantee_violations < i.guarantee_violations
+            and m.n_quarantined > 0)}})
+    return rows
+
+
+def flaky_row(cache, smoke: bool, seed: int = 0) -> dict:
+    """Degradation + flaky reconfig/restore/checkpoint ops: retries pay
+    timeout + backoff, exhaustion rolls back or requeues (health debits
+    push repeat offenders toward quarantine)."""
+    n_nodes, jobs, deg = _world(smoke, seed)
+    t0 = time.perf_counter()
+    res, sim = _run(Cluster(n_nodes=n_nodes), jobs, cache,
+                    degradation=deg,
+                    health=HealthMonitor(HealthConfig()),
+                    flaky=FlakyOps(FlakyConfig(fail_p=0.3,
+                                               seed=seed + 5)))
+    secs = time.perf_counter() - t0
+    return {"name": "grayfail/flaky_ops",
+            "us_per_call": secs / max(res.n_sched_calls, 1) * 1e6,
+            "derived": {**_metrics(res, sim), "wall_s": round(secs, 2),
+                        "fail_p": 0.3, "n_jobs": len(jobs)}}
+
+
+def parity_row(cache, smoke: bool, seed: int = 0) -> dict:
+    """Incremental vs full pass engine, bit-exact, under degradation +
+    node failures + flaky ops — the gate that quarantine, migrate-away,
+    and rollback dirty sets keep the incremental indices truthful."""
+    n_nodes = 4 if smoke else 5
+    n_jobs = 10 if smoke else 18
+    jobs = trace.philly(n_jobs=n_jobs, hours=4, seed=seed + 13,
+                        variant="base", load_scale=3.0)
+    deg = trace.degradation_storm(n_nodes, HORIZON_S, seed=seed + 31,
+                                  mtbd_s=4 * 3600.0, mttr_s=2 * 3600.0,
+                                  slowdown=(3.0, 6.0),
+                                  storm=(0.0, 8 * 3600.0, 4.0))
+    cap = trace.failure_storm(n_nodes, HORIZON_S, seed=seed + 32,
+                              mtbf_s=12 * 3600.0, mttr_s=1800.0)
+    fps = []
+    for engine in ("incremental", "full"):
+        res, _ = _run(Cluster(n_nodes=n_nodes), jobs, cache,
+                      engine=engine, capacity=cap, degradation=deg,
+                      health=HealthMonitor(HealthConfig()),
+                      flaky=FlakyOps(FlakyConfig(fail_p=0.5,
+                                                 seed=seed + 6)))
+        fps.append((res.jcts, res.makespan, res.n_reconfig,
+                    res.n_events, res.guarantee_violations,
+                    res.n_quarantined, res.n_migrate,
+                    res.n_op_retries, res.n_op_rollbacks))
+    inc = fps[0]
+    return {"name": "grayfail/parity", "derived": {
+        "engines": "incremental|full x event",
+        "n_jobs": n_jobs,
+        "n_quarantined": inc[5], "n_migrate": inc[6],
+        "n_op_retries": inc[7], "n_op_rollbacks": inc[8],
+        "decision_parity": bool(fps[0] == fps[1])}}
+
+
+def run(smoke: bool = False, traced: bool | None = None,
+        seed: int = 0) -> list[dict]:
+    if traced is None:
+        from repro.obs import trace_enabled
+        traced = trace_enabled()
+    cache = _artifacts.prewarmed_fit_cache()
+    rows = mitigation_rows(cache, smoke, traced=traced, seed=seed)
+    rows.append(flaky_row(cache, smoke, seed=seed))
+    rows.append(parity_row(cache, smoke, seed=seed))
+    _artifacts.write_bench_json("grayfail", rows, extra={
+        "smoke": smoke, "seed": seed, "sanitize": sanitize_enabled()})
+    return rows
+
+
+def main(argv: list[str]) -> int:
+    smoke = "--smoke" in argv
+    traced = True if "--trace" in argv else None
+    rows = run(smoke=smoke, traced=traced, seed=_seed_arg(argv))
+    by_name = {}
+    for row in rows:
+        print(row["name"], row["derived"])
+        by_name[row["name"]] = row["derived"]
+    if not by_name["grayfail/parity"]["decision_parity"]:
+        print("FAIL: incremental != full under gray failures",
+              file=sys.stderr)
+        return 1
+    if by_name["grayfail/flaky_ops"]["n_op_retries"] <= 0:
+        print("FAIL: flaky ops produced no retries", file=sys.stderr)
+        return 1
+    vs = by_name["grayfail/mitigate_vs_ignore"]
+    if not vs["pass_mitigate_beats_ignore"]:
+        print(f"FAIL: mitigation does not beat ignoring stragglers "
+              f"(jct {vs['jct_mitigate_h']} vs {vs['jct_ignore_h']} h, "
+              f"viol {vs['viol_mitigate']} vs {vs['viol_ignore']}, "
+              f"quarantined {vs['n_quarantined']})", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -35,6 +35,7 @@ BENCHES = [
     "bench_calibration",
     "bench_roofline",
     "bench_failures",
+    "bench_grayfail",
 ]
 
 
@@ -50,7 +51,7 @@ def _print_rows(rows: list[dict]) -> None:
     for row in rows:
         derived = json.dumps(row.get("derived", {}),
                              separators=(",", ":"), default=str)
-        print(f"{row['name']},{row['us_per_call']:.0f},"
+        print(f"{row['name']},{row.get('us_per_call', 0):.0f},"
               f"\"{derived}\"", flush=True)
 
 

@@ -91,6 +91,7 @@ class SchedSanitizer:
         self._check_rollback_aliasing(active, snap)
         self._check_beneficiary(active, snap)
         self._check_quota(running, scheduler)
+        self._check_quarantine(running, scheduler)
         if ctx is not None:
             self._check_usage_map(running, ctx)
             self._check_by_node(running, ctx)
@@ -222,6 +223,27 @@ class SchedSanitizer:
                     f"{quota} (live accounting must bound actual holdings,"
                     " not the minRes floor)",
                     ("quota_live", "quota_reserved"))
+
+    @staticmethod
+    def _check_quarantine(running: list, scheduler) -> None:
+        """Gray-failure invariant: no scheduler PASS may place a job on
+        a quarantined node.  Residents caught on a node at quarantine
+        time are migrated by the simulator between passes, so by the
+        next pass boundary no running placement intersects the set."""
+        quar = getattr(scheduler, "quarantined", None)
+        if not quar:
+            return
+        for js in running:
+            held = quar & js.placement.keys()
+            if held:
+                raise SanitizerViolation(
+                    "quarantine-placement",
+                    f"running job {_jname(js)!r} holds "
+                    f"{sorted(held)} of the quarantined set "
+                    f"{sorted(quar)} after a pass — walks must skip "
+                    "quarantined nodes and mitigation must migrate "
+                    "residents away",
+                    ("placement", "quarantined"))
 
     def _check_usage_map(self, running: list, ctx) -> None:
         truth = self._used_per_node(running)
@@ -413,6 +435,49 @@ class SchedSanitizer:
                 f"(pause_until={pu}, throughput={th}): paused seconds "
                 "must not earn progress",
                 ("progress",))
+
+    # -- gray failures --------------------------------------------------
+    @staticmethod
+    def check_op_rollback(js, plan0, alloc0, content0: dict) -> None:
+        """A flaky reconfiguration exhausted its retry budget and rolled
+        back: the job must be running its prior committed assignment
+        again — identical plan/alloc objects and placement content."""
+        if js.plan is not plan0 or js.alloc is not alloc0:
+            raise SanitizerViolation(
+                "op-rollback",
+                f"job {_jname(js)!r} rolled back a failed reconfig but "
+                f"runs (plan={js.plan}, alloc={js.alloc}) instead of the "
+                f"prior committed (plan={plan0}, alloc={alloc0})",
+                ("plan", "alloc"))
+        if dict(js.placement) != content0:
+            raise SanitizerViolation(
+                "op-rollback",
+                f"job {_jname(js)!r} rolled back a failed reconfig but "
+                f"holds {dict(js.placement)} instead of the prior "
+                f"committed placement {content0}",
+                ("placement",))
+
+    @staticmethod
+    def check_health(monitor, scheduler) -> None:
+        """Health bookkeeping invariants: the live per-node scores must
+        equal a from-scratch replay of the append-only ledger, and the
+        scheduler's quarantined set must mirror the monitor's."""
+        truth = monitor.recompute_scores()
+        for nid in set(truth) | set(monitor.scores):
+            if truth.get(nid, 1.0) != monitor.scores.get(nid, 1.0):
+                raise SanitizerViolation(
+                    "health-ledger",
+                    f"live health score for node {nid} is "
+                    f"{monitor.scores.get(nid, 1.0)!r} but replaying the "
+                    f"ledger gives {truth.get(nid, 1.0)!r} (every score "
+                    "mutation must append a ledger entry)")
+        sq = getattr(scheduler, "quarantined", None)
+        if sq is not None and sq != monitor.quarantined:
+            raise SanitizerViolation(
+                "health-quarantine",
+                f"scheduler.quarantined {sorted(sq)} != monitor's "
+                f"{sorted(monitor.quarantined)} (set_quarantine deltas "
+                "out of sync)")
 
     # -- calibration ---------------------------------------------------
     @staticmethod

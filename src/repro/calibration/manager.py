@@ -85,6 +85,7 @@ class CalibrationManager:
         self._profiles: dict[tuple, ModelProfile] = {}
         self._versions: dict[tuple, int] = {}
         self._priority: set[tuple] = set()   # default-FitParams fallbacks
+        self._excluded: set[int] = set()     # degraded nodes (health)
         self.history: list[Refit] = []       # pins retired FitParams (see
                                              # module docstring)
         # (t, key, window RMSLE) per poll — prediction error over time
@@ -125,17 +126,32 @@ class CalibrationManager:
     # ------------------------------------------------------------------
     def observe(self, profile: ModelProfile, fitted: FitParams,
                 plan: ExecutionPlan, alloc: Alloc, env: Env,
-                t_iter: float, now: float) -> None:
+                t_iter: float, now: float,
+                nodes: frozenset = frozenset(),
+                predicted: float | None = None) -> None:
         """Record one runtime measurement.  ``fitted`` is whatever the
         measured job was scheduled under — its prediction is captured
         HERE so the error timeline reflects the params that were live at
-        measurement time, across refits."""
+        measurement time, across refits.  ``nodes`` is the placement at
+        measurement time (lets the health monitor's exclusion mask
+        degraded-node evidence); ``predicted`` short-circuits the
+        predict when the caller already computed it."""
         if not (math.isfinite(t_iter) and t_iter > 0):
             return
-        pred = predict_titer(profile, plan, alloc, env, fitted)
+        pred = predicted if predicted is not None \
+            else predict_titer(profile, plan, alloc, env, fitted)
         self.store.record(fit_key(profile), Observation(
             t=now, plan=plan, alloc=alloc, env=env, t_iter=t_iter,
-            predicted=pred))
+            predicted=pred, nodes=frozenset(nodes)))
+
+    def set_excluded(self, nodes: set[int]) -> None:
+        """Mask observations touching these nodes from drift detection
+        and refit windows (the HealthMonitor's exclusion: a throttled
+        GPU inflates measured T_iter without any model drift).  The
+        mask applies retroactively to the whole window — detection that
+        lands before the drift trigger accumulates prevents the bogus
+        refit entirely."""
+        self._excluded = set(nodes)
 
     # ------------------------------------------------------------------
     def poll(self, now: float) -> list[Refit]:
@@ -147,8 +163,13 @@ class CalibrationManager:
         individually.  Returns the refits for the caller to propagate —
         see the module docstring for the invalidation contract."""
         pending: list[tuple[tuple, list]] = []   # (key, majority-env sub)
+        excl = self._excluded
         for key in self.store.keys():
             win = self.store.window(key)
+            if excl:
+                win = tuple(o for o in win if not (o.nodes & excl))
+                if not win:
+                    continue
             fresh = self.detector.fresh(key, win)
             err = window_rmsle(fresh)             # current-fit error
             if math.isfinite(err):

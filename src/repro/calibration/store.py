@@ -28,6 +28,8 @@ class Observation:
     t_iter: float                 # measured seconds per iteration
     predicted: float              # model's T_iter under the params current
                                   # at measurement time
+    nodes: frozenset = frozenset()   # placement nodes at measurement
+                                     # time (health exclusion joins here)
 
 
 class ObservationStore:

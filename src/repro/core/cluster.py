@@ -175,6 +175,16 @@ class SchedEvents:
     node_down: "list[int]" = field(default_factory=list)
     node_up: "list[int]" = field(default_factory=list)
     evicted: "list[tuple[JobState, Placement]]" = field(default_factory=list)
+    # gray-failure deltas: nodes the health monitor quarantined /
+    # released since the last pass (capacity-style node bumps), jobs
+    # migrated away from a quarantined node (pre-migration placement,
+    # evicted-style delta folding), and jobs whose elective reconfig
+    # exhausted its retry budget and rolled back to the prior committed
+    # plan (pre-rollback placement — the one the failed pass installed)
+    quarantined: "list[int]" = field(default_factory=list)
+    released: "list[int]" = field(default_factory=list)
+    migrated: "list[tuple[JobState, Placement]]" = field(default_factory=list)
+    rolled_back: "list[tuple[JobState, Placement]]" = field(default_factory=list)
 
 
 @dataclass

@@ -49,6 +49,21 @@ def restore_seconds(nbytes: float) -> float:
     return nbytes / RESTORE_BANDWIDTH + RESTORE_OVERHEAD_S
 
 
+def restore_cost(profile: ModelProfile | None = None,
+                 nbytes: float | None = None) -> float:
+    """The single restore-pause pricing entry point: pass exactly one of
+    ``profile`` (analytic — simulator restarts, sized from the model) or
+    ``nbytes`` (measured — real pytree leaves).  Both routes go through
+    the same bandwidth model so the simulator and
+    ``CheckpointManager.restore_cost_estimate`` cannot drift."""
+    if (profile is None) == (nbytes is None):
+        raise ValueError("restore_cost: pass exactly one of profile=, "
+                         "nbytes=")
+    if profile is not None:
+        nbytes = ckpt_state_bytes(profile)
+    return restore_seconds(float(nbytes))
+
+
 @dataclass(frozen=True)
 class MemEstimate:
     gpu_bytes: float

@@ -217,7 +217,9 @@ class _PassCtx:
     def apply_events(self, events: SchedEvents, sched) -> None:
         for js, freed in events.completed:
             self.remove(js, freed, sched)
-        if events.node_down or events.node_up or events.evicted:
+        if events.node_down or events.node_up or events.evicted \
+                or events.quarantined or events.released \
+                or events.migrated or events.rolled_back:
             self.apply_capacity(events, sched)
         if sched.quotas:
             for js in events.arrived:
@@ -274,7 +276,16 @@ class _PassCtx:
             self.bump_node(nid)
         for nid in events.node_up:
             self.bump_node(nid)
-        for js, before in events.evicted:
+        # quarantine flips change walk feasibility exactly like capacity
+        # flips: bump so parked walks subscribed to the node re-run
+        for nid in events.quarantined:
+            self.bump_node(nid)
+        for nid in events.released:
+            self.bump_node(nid)
+        # migrate-away and retry-rollback victims changed placement
+        # outside a pass — same delta folding as capacity eviction
+        for js, before in (events.evicted + events.migrated
+                           + events.rolled_back):
             jid = id(js)
             if jid not in self.members:
                 continue
@@ -562,6 +573,11 @@ class RubickScheduler:
         self._order_memo: dict[tuple, list] = {}
         self._memo_cluster: weakref.ref | None = None
         self._ctx: _PassCtx | None = None
+        # gray-failure state (health monitor drives both): quarantined
+        # nodes are skipped by every placement walk; node_health carries
+        # the monitor's live scores for observability/sanitizer checks
+        self.quarantined: set[int] = set()
+        self.node_health: dict[int, float] = {}
         # flight recorder (repro.obs.FlightRecorder); the simulator
         # attaches its own when tracing is on.  None = every emit site
         # collapses to one false branch
@@ -594,6 +610,32 @@ class RubickScheduler:
         self._curve_memo.clear()
         self._order_memo.clear()
         self._memo_cluster = None
+
+    def set_quarantine(self, add=(), release=(),
+                       scores: dict[int, float] | None = None) -> None:
+        """Apply the health monitor's quarantine decisions.  The
+        corresponding SchedEvents (``quarantined`` / ``released``) must
+        carry the same node ids so the incremental pass context bumps
+        them — callers that bypass events must reset_indices()."""
+        for nid in add:
+            self.quarantined.add(nid)
+        for nid in release:
+            self.quarantined.discard(nid)
+        if scores is not None:
+            self.node_health = dict(scores)
+
+    def note_external_move(self, js: JobState, before: Placement) -> None:
+        """Fold one out-of-band placement change (e.g. a reconfig
+        rollback after retry exhaustion) into the persistent pass
+        context IMMEDIATELY.  Deferring the delta to the next pass's
+        SchedEvents would double-fold ``ctx.used`` if a capacity
+        eviction hits the same job in between — the eviction folds from
+        ``before`` while the context still holds the rolled-back
+        placement.  No-op without a live context (full engine, or first
+        pass not run yet)."""
+        if self._ctx is not None:
+            self._ctx.apply_capacity(
+                SchedEvents(rolled_back=[(js, before)]), self)
 
     def _purge_refit_memos(self, refits) -> None:
         """Drop memo entries keyed by a retired FitParams identity.  The
@@ -1213,6 +1255,12 @@ class RubickScheduler:
                 break
             if reads is not None:
                 reads.append(node.id)
+            # quarantined nodes are invisible to placement (gray-failure
+            # mitigation).  The skip comes AFTER the read-set append so a
+            # parked no-op walk subscribes to the node and the release
+            # bump wakes it.
+            if node.id in self.quarantined:
+                continue
             fg, fc, fm = node.free(wu)
             if ctx is not None and fg <= 0:
                 # free-capacity index: a full node with no shrinkable

@@ -54,11 +54,29 @@ feasible survives — or always, under ``cfg.recovery="kill"``), rolls its
 progress back to the last checkpoint (periodic every ``ckpt_interval``
 seconds; revoke-with-warning drains to a clean checkpoint first and
 loses nothing), and charges a restore pause from the checkpoint-state
-size (``memory.ckpt_state_bytes`` / ``memory.restore_seconds`` — the
-same model ``checkpoint.restore_cost_estimate`` applies to real
-pytrees).  The scheduler pass at a capacity event receives the deltas in
+size (``memory.restore_cost`` — the same pricing
+``checkpoint.restore_cost_estimate`` applies to real pytrees).  The
+scheduler pass at a capacity event receives the deltas in
 ``SchedEvents`` (node_down / node_up / evicted) so the incremental pass
 engine folds lost capacity out of its persistent indices.
+
+Gray-failure resilience (ISSUE 10): pass ``degradation`` (a list of
+``trace.DegradationEvent``) and both engines multiply measured T_iter
+of every job touching a degraded node by the node's slowdown factor
+(the gang runs at its slowest worker) — nothing is freed, the
+scheduler stays oblivious until telemetry reveals the gap.  Pass
+``health`` (a ``repro.health.HealthMonitor``) and telemetry
+observations also feed node-blame attribution: quarantine decisions at
+telemetry ticks flow into the scheduler (walks skip quarantined nodes)
+and resident victims are migrated away via the recovery policy, while
+the calibration manager masks degraded-node observations so a
+throttled GPU never triggers a bogus refit.  Pass ``flaky`` (a
+``repro.health.FlakyOps``) and reconfiguration / checkpoint / restore
+operations can fail: each failed attempt burns timeout + exponential
+backoff as pause time, and budget exhaustion rolls an elective
+reconfiguration back to the prior committed plan (kill-and-requeue if
+the old slots were taken), re-queues a failed restore, and debits the
+target nodes' health scores.
 """
 
 from __future__ import annotations
@@ -72,12 +90,14 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.cluster import (Cluster, Job, JobState, SchedEvents,
-                                check_capacity, state_digest)
+                                check_capacity, state_digest,
+                                used_per_node)
 from repro.core.fitting import fit_batch
-from repro.core.memory import ckpt_state_bytes, restore_seconds
+from repro.core.memory import restore_cost
 from repro.core.oracle import (AnalyticOracle, profiling_requests,
                                profiling_samples)
-from repro.core.perfmodel import Env, FitParams, fit, fit_key
+from repro.core.perfmodel import (Env, FitParams, fit, fit_key,
+                                  predict_titer)
 from repro.core.sensitivity import get_curve
 
 # A guaranteed job "violates" when its measured throughput drops below its
@@ -93,6 +113,11 @@ GUARANTEE_TOL = 0.1
 EV_ARRIVAL, EV_COMPLETION = 0, 1
 EV_NODE_FAIL, EV_NODE_RECOVER, EV_SPOT_ARRIVE, EV_SPOT_REVOKE = 2, 3, 4, 5
 EV_PAUSE_END, EV_TELEMETRY = 6, 7
+# gray failures: appended after the existing kinds so same-instant
+# tie-break order is unchanged; within one batch the engine applies
+# capacity first, then degradation, then telemetry reads the settled
+# state (the manual ordering below, not the heap, decides)
+EV_DEGRADE = 8
 
 # CapacityEvent.kind label -> heap event kind (unknown labels dispatch on
 # the event's ``down`` flag — the semantics live there, kinds are labels)
@@ -118,6 +143,12 @@ class SimResult:
     n_cap_events: int = 0             # capacity events applied
     n_shrink_recover: int = 0         # evictions survived by shrinking
     n_kill_requeue: int = 0           # evictions that killed-and-requeued
+    # gray-failure counters (ISSUE 10)
+    n_degrade_events: int = 0         # degradation transitions applied
+    n_quarantined: int = 0            # quarantine decisions (nodes)
+    n_migrate: int = 0                # residents migrated off quarantine
+    n_op_retries: int = 0             # flaky-op attempts that retried
+    n_op_rollbacks: int = 0           # flaky-op budgets exhausted
     # observability (repro.obs): the run's FlightRecorder when tracing was
     # on, plus downtime accounting DERIVED from its pause events — the
     # recorder is the single source of truth, not ad-hoc counters
@@ -151,6 +182,14 @@ class SimResult:
             out["n_cap_events"] = self.n_cap_events
             out["n_shrink_recover"] = self.n_shrink_recover
             out["n_kill_requeue"] = self.n_kill_requeue
+        if self.n_degrade_events:
+            out["n_degrade_events"] = self.n_degrade_events
+        if self.n_quarantined:
+            out["n_quarantined"] = self.n_quarantined
+            out["n_migrate"] = self.n_migrate
+        if self.n_op_retries or self.n_op_rollbacks:
+            out["n_op_retries"] = self.n_op_retries
+            out["n_op_rollbacks"] = self.n_op_rollbacks
         if self.total_paused_s:
             out["total_paused_h"] = self.total_paused_s / 3600
             out["restore_paused_h"] = self.restore_paused_s / 3600
@@ -166,7 +205,8 @@ class Simulator:
                  calibration=None, telemetry_interval: float = 300.0,
                  capacity: list | None = None,
                  ckpt_interval: float = 1800.0,
-                 recorder=None):
+                 recorder=None, degradation: list | None = None,
+                 health=None, flaky=None):
         self.cluster = cluster
         self.scheduler = scheduler
         self.env = env or Env()
@@ -178,6 +218,14 @@ class Simulator:
         # checkpoint cadence bounding the work a hard failure loses
         self.capacity = capacity
         self.ckpt_interval = ckpt_interval
+        # gray failures (ISSUE 10): degradation event stream
+        # (trace.DegradationEvent), optional HealthMonitor, optional
+        # FlakyOps; the live per-node slowdown multiplier map is the
+        # injection's only planted state — the oracle stays pure
+        self.degradation = degradation
+        self.health = health
+        self.flaky = flaky
+        self._slowdown: dict[int, float] = {}
         # online calibration (repro.calibration.CalibrationManager or any
         # object with ensure/observe/poll); None = telemetry disabled
         self.calibration = calibration
@@ -275,16 +323,38 @@ class Simulator:
         else:
             t = self.oracle.measure(js.job.profile, js.plan, js.alloc,
                                     env=self._env_of(js))
+        if self._slowdown:
+            # gray failure: the gang is gated by its slowest worker, so
+            # measured T_iter scales by the worst factor over placement
+            f = max((self._slowdown.get(nid, 1.0)
+                     for nid in js.placement), default=1.0)
+            if f > 1.0:
+                t *= f
         return js.job.profile.b / t if math.isfinite(t) and t > 0 else 0.0
 
     def _observe(self, js: JobState, thpt: float, now: float) -> None:
         """Emit one telemetry observation (measured T_iter) for a running
-        job to the calibration manager."""
-        if self.calibration is None or thpt <= 0.0:
+        job — the calibration manager and the health monitor consume the
+        SAME stream (the prediction is computed once for both)."""
+        cal, hm = self.calibration, self.health
+        if (cal is None and hm is None) or thpt <= 0.0:
             return
-        self.calibration.observe(js.job.profile, js.fitted, js.plan,
-                                 js.alloc, self._env_of(js),
-                                 js.job.profile.b / thpt, now)
+        t_iter = js.job.profile.b / thpt
+        nodes = frozenset(js.placement)
+        pred = None
+        if hm is not None and js.fitted is not None \
+                and js.plan is not None and js.alloc is not None:
+            pred = predict_titer(js.job.profile, js.plan, js.alloc,
+                                 self._env_of(js), js.fitted)
+            if math.isfinite(pred) and pred > 0.0:
+                hm.observe(now, js.job.name, fit_key(js.job.profile),
+                           nodes, t_iter, pred)
+            else:
+                pred = None
+        if cal is not None:
+            cal.observe(js.job.profile, js.fitted, js.plan,
+                        js.alloc, self._env_of(js), t_iter, now,
+                        nodes=nodes, predicted=pred)
 
     def _apply_refit(self, refit, states: list[JobState],
                      active_ids: set[int]) -> list[tuple[JobState,
@@ -334,9 +404,9 @@ class Simulator:
     # ------------------------------------------------------------------
     def _restore_cost(self, profile) -> float:
         """Seconds a restart from the last checkpoint costs: reload
-        weights + optimizer states from shared storage (the same model
+        weights + optimizer states from shared storage (the same pricing
         ``checkpoint.restore_cost_estimate`` applies to real pytrees)."""
-        return restore_seconds(ckpt_state_bytes(profile))
+        return restore_cost(profile=profile)
 
     def _sample_metrics(self, fr, t: float, active: list[JobState],
                         violations: int, thpt_map: dict) -> None:
@@ -437,7 +507,23 @@ class Simulator:
         before = dict(s.placement)
         fr = self.recorder
         prog0 = s.progress
-        if down_set & before.keys() <= graceful:
+        clean = down_set & before.keys() <= graceful
+        if clean and self.flaky is not None:
+            # flaky drain checkpoint: budget exhaustion degrades the
+            # graceful revoke to a hard failure (the warning expired
+            # before a checkpoint landed)
+            o = self.flaky.attempt("checkpoint", s.job.name)
+            if fr is not None and o.n_attempts > 1:
+                fr.decision("retry", now, job=s.job.name,
+                            cause="checkpoint",
+                            data={"attempts": o.n_attempts, "ok": o.ok,
+                                  "delay_s": round(o.delay_s, 1)})
+            if not o.ok:
+                clean = False
+                if self.health is not None:
+                    for nid in sorted(down_set & before.keys()):
+                        self.health.debit(now, nid, reason="op-fail")
+        if clean:
             s.ckpt_progress = s.progress     # drained during the warning
             if fr is not None:
                 fr.decision("checkpoint", now, job=s.job.name,
@@ -477,6 +563,157 @@ class Simulator:
         return s, before, outcome
 
     # ------------------------------------------------------------------
+    # gray-failure dynamics (ISSUE 10) — shared by both engines
+    # ------------------------------------------------------------------
+    def _apply_degradation(self, batch, now: float) -> set[int]:
+        """Apply one instant's degradation transitions to the per-node
+        slowdown map.  Returns the touched node ids so the event engine
+        can re-measure (and re-arm) affected running jobs.  The
+        scheduler is NOT notified — a gray failure frees nothing, and
+        only the health monitor's telemetry attribution may react."""
+        fr = self.recorder
+        changed: set[int] = set()
+        for de in batch:
+            if de.factor > 1.0:
+                self._slowdown[de.node] = de.factor
+            else:
+                self._slowdown.pop(de.node, None)
+            changed.add(de.node)
+            if fr is not None:
+                fr.decision("degrade", now, data={
+                    "node": de.node, "factor": de.factor,
+                    "kind": de.kind})
+        return changed
+
+    def _poll_health(self, active: list[JobState], now: float):
+        """Run the health monitor at a telemetry tick: refresh the
+        calibration exclusion, push quarantine/release decisions into
+        the scheduler, and migrate running victims off newly
+        quarantined nodes.  Returns ``(report, affected)`` with
+        ``affected`` shaped like ``_apply_capacity``'s."""
+        hm = self.health
+        rep = hm.poll(now)
+        if self.calibration is not None:
+            self.calibration.set_excluded(hm.excluded_nodes)
+        sq = getattr(self.scheduler, "set_quarantine", None)
+        if sq is None:
+            return rep, []
+        sq(add=rep.quarantine, release=rep.release,
+           scores=dict(hm.scores))
+        fr = self.recorder
+        if fr is not None:
+            for nid in rep.quarantine:
+                fr.decision("quarantine", now, data={
+                    "node": nid, "score": hm.score(nid), "on": True})
+            for nid in rep.release:
+                fr.decision("quarantine", now, data={
+                    "node": nid, "score": hm.score(nid), "on": False})
+        affected = []
+        if rep.quarantine:
+            newq = set(rep.quarantine)
+            for s in active:
+                if s.status == "running" and newq & s.placement.keys():
+                    affected.append(
+                        self._migrate_victim(s, active, newq, now))
+        if self._san is not None:
+            self._san.check_health(hm, self.scheduler)
+        return rep, affected
+
+    def _migrate_victim(self, s: JobState, active: list[JobState],
+                        newq: set[int], now: float) -> tuple:
+        """Migrate-away for ONE running job touching a quarantined node.
+        The node is slow, not dead, so the job drains to a clean
+        checkpoint in place (nothing lost), then the scheduler's
+        recovery policy re-plans over the healthy slice of its
+        placement; a reconfiguration pause is charged instead of a
+        restore (checkpoint-resume, no reload from storage)."""
+        before = dict(s.placement)
+        fr = self.recorder
+        s.ckpt_progress = s.progress         # clean drain
+        outcome = self.scheduler.recover(s, active, self.cluster, newq,
+                                         now)
+        if outcome == "shrunk":
+            old_pu = s.pause_until
+            s.pause_until = max(s.pause_until, now + self.reconfig_cost)
+            s.needs_restore = False
+            if fr is not None:
+                fr.pause(s.job.name, "reconfig",
+                         s.pause_until - max(old_pu, now), now)
+        else:
+            s.pause_until = 0.0
+            s.needs_restore = True
+        if fr is not None:
+            fr.decision("mitigate", now, job=s.job.name, cause=outcome,
+                        data={"nodes": sorted(newq & before.keys()),
+                              "kept_gpus": s.total_gpus})
+        return s, before, outcome
+
+    def _flaky_op(self, op: str, s: JobState, now: float):
+        """One flaky-operation attempt sequence (None = flaky off or op
+        type not selected: zero-cost success)."""
+        fl = self.flaky
+        if fl is None:
+            return None
+        o = fl.attempt(op, s.job.name)
+        if o.n_attempts <= 1 and o.ok:
+            return o
+        fr = self.recorder
+        if fr is not None:
+            fr.decision("retry", now, job=s.job.name, cause=op,
+                        data={"attempts": o.n_attempts, "ok": o.ok,
+                              "delay_s": round(o.delay_s, 1)})
+        if not o.ok and self.health is not None:
+            # exhaustion debits the op's target nodes — repeated op
+            # failures against one node drive it toward quarantine
+            for nid in sorted(s.placement):
+                self.health.debit(now, nid, reason="op-fail")
+        return o
+
+    def _rollback_reconfig(self, s: JobState, plan0, alloc0,
+                           content0: dict, placement0: dict,
+                           active: list[JobState], now: float) -> str:
+        """An elective reconfiguration exhausted its retry budget: put
+        the job back on its prior committed plan IF those slots still
+        exist (nodes up, unquarantined, capacity free next to the other
+        running jobs — the same pass may have handed them out);
+        otherwise kill-and-requeue through the restore path.  Either
+        way the checkpoint taken before the attempt bounds the loss to
+        time, never progress.  ``placement0`` is the pre-pass placement
+        dict OBJECT — the rollback restores into it so external
+        aliases (sanitizer snapshots) stay truthful."""
+        quar = getattr(self.scheduler, "quarantined", set())
+        others = used_per_node([j for j in active if j is not s
+                                and j.status == "running"])
+        ok = True
+        for nid, (g, c, m) in content0.items():
+            node = self.cluster.nodes[nid]
+            if not node.up or nid in quar:
+                ok = False
+                break
+            fg, fc, fm = node.free(others)
+            if g > fg or c > fc or m > fm + 1e-3:
+                ok = False
+                break
+        if not ok:
+            s.status = "queued"
+            s.placement = {}
+            s.plan = None
+            s.alloc = None
+            s.needs_restore = True
+            s.pause_until = 0.0
+            return "requeued"
+        placement0.clear()
+        placement0.update(content0)
+        s.placement = placement0
+        s.plan = plan0
+        s.alloc = alloc0
+        # n_reconfig stays incremented: the failed attempt and the
+        # rollback were real reconfiguration work
+        if self._san is not None:
+            self._san.check_op_rollback(s, plan0, alloc0, content0)
+        return "restored"
+
+    # ------------------------------------------------------------------
     def run(self, jobs: list[Job], max_time: float = 7 * 86400.0,
             mode: str | None = None) -> SimResult:
         mode = mode or self.mode
@@ -509,7 +746,12 @@ class Simulator:
             kind = _CAP_EV.get(ce.kind,
                                EV_NODE_FAIL if ce.down else EV_NODE_RECOVER)
             heapq.heappush(heap, (ce.time, kind, next(seq), ce))
-        if cal is not None and states:
+        for de in (self.degradation or []):
+            heapq.heappush(heap, (de.time, EV_DEGRADE, next(seq), de))
+        # telemetry ticks run when anything consumes the stream —
+        # calibration, the health monitor, or both
+        tick = cal is not None or self.health is not None
+        if tick and states:
             heapq.heappush(heap, (self.telemetry_interval, EV_TELEMETRY,
                                   next(seq), None))
 
@@ -522,8 +764,11 @@ class Simulator:
         thpt: dict[int, float] = {}        # oracle samples/s per assignment
         violations = n_events = n_sched = n_refits = 0
         n_cap = n_shrink = n_kill = 0
+        n_deg = n_quar = n_migrate = 0
         t = 0.0
         san = self._san
+        fl = self.flaky
+        note_move = getattr(self.scheduler, "note_external_move", None)
 
         def advance(to: float) -> None:
             """Integrate progress/run_time over [t, to]: throughput is
@@ -603,6 +848,10 @@ class Simulator:
             ev_down: list[int] = []
             ev_up: list[int] = []
             ev_evicted: list[tuple] = []
+            ev_quar: list[int] = []
+            ev_rel: list[int] = []
+            ev_migrated: list[tuple] = []
+            deg_batch: list = []
             for _, kind, _, payload in batch:
                 if kind == EV_ARRIVAL:
                     active.append(payload)
@@ -631,6 +880,8 @@ class Simulator:
                                           "n_reconfig": s.n_reconfig})
                 elif EV_NODE_FAIL <= kind <= EV_SPOT_REVOKE:
                     cap_batch.append(payload)
+                elif kind == EV_DEGRADE:
+                    deg_batch.append(payload)
                 elif kind == EV_PAUSE_END:
                     s = payload
                     if s.status == "running" \
@@ -659,6 +910,18 @@ class Simulator:
                 if ev_down or ev_up or ev_evicted:
                     state_changed = True
 
+            if deg_batch:
+                # gray failures: re-measure (and re-arm completions of)
+                # every running job touching a changed node.  NOT a
+                # state change — the scheduler stays oblivious until the
+                # health monitor attributes the telemetry gap.
+                changed = self._apply_degradation(deg_batch, t)
+                n_deg += len(deg_batch)
+                for s in active:
+                    if s.status == "running" \
+                            and changed & s.placement.keys():
+                        resample(s, t)
+
             if tel_due:
                 # periodic telemetry: sample every running unpaused job.
                 # Under a drifting oracle the truth moved since the last
@@ -673,10 +936,32 @@ class Simulator:
                         resample(s, t)
                     else:
                         self._observe(s, thpt.get(id(s), 0.0), t)
-                for refit in cal.poll(t):
-                    ev_refit += self._apply_refit(refit, states,
-                                                  {id(s) for s in active})
-                    n_refits += 1
+                if self.health is not None:
+                    # health attribution runs AFTER this tick's
+                    # observations and BEFORE the calibration poll, so
+                    # a fresh exclusion masks this tick's drift check
+                    rep, affected = self._poll_health(active, t)
+                    ev_quar = list(rep.quarantine)
+                    ev_rel = list(rep.release)
+                    n_quar += len(ev_quar)
+                    for s, before, outcome in affected:
+                        ev_migrated.append((s, before))
+                        n_migrate += 1
+                        if outcome == "shrunk":
+                            heapq.heappush(heap, (s.pause_until,
+                                                  EV_PAUSE_END,
+                                                  next(seq), s))
+                            resample(s, t)
+                        else:
+                            epoch[id(s)] = epoch.get(id(s), 0) + 1
+                            thpt.pop(id(s), None)
+                    if ev_quar or ev_rel:
+                        state_changed = True
+                if cal is not None:
+                    for refit in cal.poll(t):
+                        ev_refit += self._apply_refit(
+                            refit, states, {id(s) for s in active})
+                        n_refits += 1
                 if ev_refit:
                     state_changed = True
                 if active or heap:     # quiesced + drained ⇒ stop ticking
@@ -684,7 +969,9 @@ class Simulator:
                                           EV_TELEMETRY, next(seq), None))
 
             if state_changed:
-                prev = {id(s): (s.plan, s.alloc, s.status, s.placement)
+                prev = {id(s): (s.plan, s.alloc, s.status, s.placement,
+                                dict(s.placement) if fl is not None
+                                else None)
                         for s in active}
                 if getattr(self.scheduler, "accepts_events", False):
                     self.scheduler.schedule(
@@ -694,7 +981,10 @@ class Simulator:
                                            refit=ev_refit,
                                            node_down=ev_down,
                                            node_up=ev_up,
-                                           evicted=ev_evicted))
+                                           evicted=ev_evicted,
+                                           quarantined=ev_quar,
+                                           released=ev_rel,
+                                           migrated=ev_migrated))
                 else:
                     self.scheduler.schedule(active, self.cluster, t)
                 n_sched += 1
@@ -708,10 +998,31 @@ class Simulator:
                                 # killed by a capacity loss: the restart
                                 # reloads the checkpoint before training
                                 s.needs_restore = False
+                                o = self._flaky_op("restore", s, t)
+                                if o is not None and not o.ok:
+                                    # restore exhausted: back to the
+                                    # queue, placement freed; the next
+                                    # admission retries a fresh restore
+                                    before_rb = dict(s.placement)
+                                    s.status = "queued"
+                                    s.placement = {}
+                                    s.plan = None
+                                    s.alloc = None
+                                    s.needs_restore = True
+                                    s.pause_until = 0.0
+                                    if note_move is not None:
+                                        note_move(s, before_rb)
+                                    epoch[id(s)] = epoch.get(id(s),
+                                                             0) + 1
+                                    thpt.pop(id(s), None)
+                                    continue
+                                delay = o.delay_s if o is not None \
+                                    else 0.0
                                 old_pu = s.pause_until
                                 s.pause_until = max(
                                     s.pause_until,
-                                    t + self._restore_cost(s.job.profile))
+                                    t + self._restore_cost(s.job.profile)
+                                    + delay)
                                 heapq.heappush(heap, (s.pause_until,
                                                       EV_PAUSE_END,
                                                       next(seq), s))
@@ -726,9 +1037,47 @@ class Simulator:
                             # at most to here.  max() keeps a restore
                             # pause charged this instant from shrinking.
                             s.ckpt_progress = s.progress
+                            o = self._flaky_op("reconfig", s, t)
+                            if o is not None and not o.ok:
+                                # retry budget exhausted: roll back to
+                                # the prior committed plan (or requeue
+                                # if its slots were given away); the
+                                # burned attempts are charged as pause
+                                before_rb = dict(s.placement)
+                                outcome = self._rollback_reconfig(
+                                    s, was[0], was[1], was[4], was[3],
+                                    active, t)
+                                if note_move is not None:
+                                    note_move(s, before_rb)
+                                if fr is not None:
+                                    fr.decision(
+                                        "mitigate", t, job=s.job.name,
+                                        cause=f"rollback-{outcome}",
+                                        data={"burned_s":
+                                              round(o.delay_s, 1)})
+                                if outcome == "restored":
+                                    old_pu = s.pause_until
+                                    s.pause_until = max(s.pause_until,
+                                                        t + o.delay_s)
+                                    heapq.heappush(
+                                        heap, (s.pause_until,
+                                               EV_PAUSE_END,
+                                               next(seq), s))
+                                    if fr is not None:
+                                        fr.pause(s.job.name, "reconfig",
+                                                 s.pause_until
+                                                 - max(old_pu, t), t)
+                                    resample(s, t)
+                                else:
+                                    epoch[id(s)] = epoch.get(id(s),
+                                                             0) + 1
+                                    thpt.pop(id(s), None)
+                                continue
+                            delay = o.delay_s if o is not None else 0.0
                             old_pu = s.pause_until
                             s.pause_until = max(s.pause_until,
-                                                t + self.reconfig_cost)
+                                                t + self.reconfig_cost
+                                                + delay)
                             heapq.heappush(heap, (s.pause_until,
                                                   EV_PAUSE_END, next(seq),
                                                   s))
@@ -763,7 +1112,9 @@ class Simulator:
         return self._assemble(active + done, t, violations,
                               n_events=n_events, n_sched=n_sched,
                               n_refits=n_refits, n_cap=n_cap,
-                              n_shrink=n_shrink, n_kill=n_kill)
+                              n_shrink=n_shrink, n_kill=n_kill,
+                              n_deg=n_deg, n_quar=n_quar,
+                              n_migrate=n_migrate)
 
     # ------------------------------------------------------------------
     # discrete-time reference loop (the original polling engine)
@@ -782,16 +1133,22 @@ class Simulator:
         cal = self.calibration
         arrivals = sorted(states, key=lambda s: s.job.submit)
         t = 0.0
-        next_tel = self.telemetry_interval if cal is not None else math.inf
+        tick = cal is not None or self.health is not None
+        next_tel = self.telemetry_interval if tick else math.inf
         pending: list[JobState] = list(arrivals)
         active: list[JobState] = []
         cap = sorted(self.capacity or [],
                      key=lambda e: (e.time, e.node, not e.down))
         ci = 0
+        deg = sorted(self.degradation or [],
+                     key=lambda e: (e.time, e.node, e.factor))
+        di = 0
+        fl = self.flaky
         violations = 0
         n_sched = 0
         n_refits = 0
         n_cap = n_shrink = n_kill = 0
+        n_deg = n_quar = n_migrate = 0
 
         def next_arrival() -> float:
             return pending[0].job.submit if pending else math.inf
@@ -821,7 +1178,20 @@ class Simulator:
                     elif outcome == "killed":
                         n_kill += 1
 
-            prev = {id(s): (s.plan, s.alloc, s.status) for s in active}
+            # apply due degradation transitions (dt clamps below land the
+            # loop exactly on each edge; _true_throughput reads the live
+            # slowdown map every step, so no re-arming is needed here)
+            deg_batch = []
+            while di < len(deg) and deg[di].time <= t + 1e-9:
+                deg_batch.append(deg[di])
+                di += 1
+            if deg_batch:
+                self._apply_degradation(deg_batch, t)
+                n_deg += len(deg_batch)
+
+            prev = {id(s): (s.plan, s.alloc, s.status, s.placement,
+                            dict(s.placement) if fl is not None else None)
+                    for s in active}
             self.scheduler.schedule(active, self.cluster, t)
             n_sched += 1
             assert check_capacity(self.cluster, active), "over-allocation"
@@ -834,9 +1204,31 @@ class Simulator:
                     # checkpoint-resume: saves a checkpoint (bounds a
                     # later failure's rollback), then pauses for δ
                     s.ckpt_progress = s.progress
+                    o = self._flaky_op("reconfig", s, t)
+                    if o is not None and not o.ok:
+                        # retry budget exhausted: roll back (no ctx
+                        # repair needed — this loop passes no events, so
+                        # incremental engines rebuild from scratch)
+                        outcome = self._rollback_reconfig(
+                            s, was[0], was[1], was[4], was[3], active, t)
+                        if fr is not None:
+                            fr.decision("mitigate", t, job=s.job.name,
+                                        cause=f"rollback-{outcome}",
+                                        data={"burned_s":
+                                              round(o.delay_s, 1)})
+                        if outcome == "restored":
+                            old_pu = s.pause_until
+                            s.pause_until = max(s.pause_until,
+                                                t + o.delay_s)
+                            if fr is not None:
+                                fr.pause(s.job.name, "reconfig",
+                                         s.pause_until - max(old_pu, t),
+                                         t)
+                        continue
+                    delay = o.delay_s if o is not None else 0.0
                     old_pu = s.pause_until
                     s.pause_until = max(s.pause_until,
-                                        t + self.reconfig_cost)
+                                        t + self.reconfig_cost + delay)
                     if fr is not None:
                         fr.decision("checkpoint", t, job=s.job.name,
                                     cause="reconfig")
@@ -846,9 +1238,21 @@ class Simulator:
                     # killed by a capacity loss, restarted this pass: the
                     # restart reloads the checkpoint before training
                     s.needs_restore = False
+                    o = self._flaky_op("restore", s, t)
+                    if o is not None and not o.ok:
+                        # restore exhausted: back to the queue
+                        s.status = "queued"
+                        s.placement = {}
+                        s.plan = None
+                        s.alloc = None
+                        s.needs_restore = True
+                        s.pause_until = 0.0
+                        continue
+                    delay = o.delay_s if o is not None else 0.0
                     old_pu = s.pause_until
-                    s.pause_until = max(s.pause_until,
-                                        t + self._restore_cost(s.job.profile))
+                    s.pause_until = max(
+                        s.pause_until,
+                        t + self._restore_cost(s.job.profile) + delay)
                     if fr is not None:
                         fr.pause(s.job.name, "restore",
                                  s.pause_until - max(old_pu, t), t)
@@ -884,23 +1288,33 @@ class Simulator:
             # periodic telemetry + drift-triggered refits (the refit takes
             # effect at the NEXT pass — this loop rebuilds scheduler state
             # from the live job states every step anyway)
-            if cal is not None and t + 1e-9 >= next_tel:
+            if tick and t + 1e-9 >= next_tel:
                 for s in active:
                     if s.status == "running" and s.pause_until <= t:
                         self._observe(s, thpts.get(id(s), 0.0), t)
-                for refit in cal.poll(t):
-                    self._apply_refit(refit, states,
-                                      {id(s) for s in active})
-                    n_refits += 1
+                if self.health is not None:
+                    # detect → quarantine → migrate BEFORE cal.poll at
+                    # the same tick: the refreshed exclusion mask keeps
+                    # degraded-node evidence out of drift windows
+                    rep, affected = self._poll_health(active, t)
+                    n_quar += len(rep.quarantine)
+                    n_migrate += len(affected)
+                if cal is not None:
+                    for refit in cal.poll(t):
+                        self._apply_refit(refit, states,
+                                          {id(s) for s in active})
+                        n_refits += 1
                 while next_tel <= t + 1e-9:
                     next_tel += self.telemetry_interval
 
             # time to next event
             dt = next_arrival() - t
-            if cal is not None:
+            if tick:
                 dt = min(dt, next_tel - t)     # land on telemetry ticks
             if ci < len(cap):
                 dt = min(dt, cap[ci].time - t)  # land on capacity events
+            if di < len(deg):
+                dt = min(dt, deg[di].time - t)  # land on degradation edges
             for s in active:
                 if s.status != "running":
                     continue
@@ -954,13 +1368,16 @@ class Simulator:
         self.last_states = states          # inspectable by tests/benchmarks
         return self._assemble(active, t, violations, n_sched=n_sched,
                               n_refits=n_refits, n_cap=n_cap,
-                              n_shrink=n_shrink, n_kill=n_kill)
+                              n_shrink=n_shrink, n_kill=n_kill,
+                              n_deg=n_deg, n_quar=n_quar,
+                              n_migrate=n_migrate)
 
     # ------------------------------------------------------------------
     def _assemble(self, arrived: list[JobState], t: float, violations: int,
                   n_events: int = 0, n_sched: int = 0,
                   n_refits: int = 0, n_cap: int = 0, n_shrink: int = 0,
-                  n_kill: int = 0) -> SimResult:
+                  n_kill: int = 0, n_deg: int = 0, n_quar: int = 0,
+                  n_migrate: int = 0) -> SimResult:
         jcts = {}
         by_class: dict[str, list[float]] = {"guaranteed": [],
                                             "best_effort": []}
@@ -980,7 +1397,12 @@ class Simulator:
                         unfitted=sorted({k[0] for k in
                                          self._unfitted & keys}),
                         n_refits=n_refits, n_cap_events=n_cap,
-                        n_shrink_recover=n_shrink, n_kill_requeue=n_kill)
+                        n_shrink_recover=n_shrink, n_kill_requeue=n_kill,
+                        n_degrade_events=n_deg, n_quarantined=n_quar,
+                        n_migrate=n_migrate)
+        if self.flaky is not None:
+            res.n_op_retries = self.flaky.n_retries
+            res.n_op_rollbacks = self.flaky.n_rollbacks
         fr = self.recorder
         if fr is not None:
             # downtime surfaced on the result is DERIVED from the

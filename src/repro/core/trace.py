@@ -21,6 +21,12 @@ preemptible pool (nodes arrive for an off-peak window each day, revoked
 with a warning that lets jobs checkpoint cleanly).  Both are seeded and
 return sorted ``CapacityEvent`` lists the simulator turns into heap
 events (EV_CAPACITY).
+
+Gray failures: ``degradation_storm`` emits ``DegradationEvent`` streams
+— nodes do not die, they *slow down* (throttled GPU clocks, a flapping
+NIC) by a per-episode factor, or hang outright (a very large factor).
+The simulator multiplies measured T_iter of any job touching a degraded
+node; nothing is freed, so only telemetry can reveal the problem.
 """
 
 from __future__ import annotations
@@ -45,6 +51,42 @@ GPU_PROBS = [0.45, 0.15, 0.15, 0.13, 0.07, 0.03, 0.02]
 # type; the other half of the jobs are type-agnostic)
 HETERO_MIX = [("a800", 0.35), ("h800", 0.15), ("a100-40g", 0.25),
               ("v100", 0.25)]
+
+
+def _check_rates(horizon_s: float, **rates_s: float) -> None:
+    """Shared input validation for the capacity/degradation processes:
+    every rate parameter must be a positive, finite number of seconds —
+    a zero MTBF would loop forever, a negative MTTR silently reorders
+    fail/repair pairs, and both used to yield degenerate streams."""
+    if not (horizon_s > 0.0 and math.isfinite(horizon_s)):
+        raise ValueError(
+            f"horizon_s must be positive and finite, got {horizon_s!r}")
+    for name, val in rates_s.items():
+        if not (val > 0.0 and math.isfinite(val)):
+            raise ValueError(
+                f"{name} must be positive and finite, got {val!r} "
+                f"(zero/negative rates yield degenerate event streams)")
+
+
+def _check_storm(storm: tuple[float, float, float] | None,
+                 horizon_s: float) -> None:
+    """A storm window entirely outside ``[0, horizon_s)`` (or inverted,
+    or with a non-positive rate multiplier) silently degenerates to the
+    background process — reject it loudly instead."""
+    if storm is None:
+        return
+    start, end, rate_mult = storm
+    if end <= start:
+        raise ValueError(
+            f"storm window is empty: end ({end!r}) <= start ({start!r})")
+    if start >= horizon_s or end <= 0.0:
+        raise ValueError(
+            f"storm window [{start!r}, {end!r}) lies outside the "
+            f"horizon [0, {horizon_s!r}) — no event would see it")
+    if not (rate_mult > 0.0 and math.isfinite(rate_mult)):
+        raise ValueError(
+            f"storm rate_mult must be positive and finite, "
+            f"got {rate_mult!r}")
 
 
 @dataclass(frozen=True)
@@ -75,6 +117,14 @@ def failure_storm(n_nodes: int, horizon_s: float, seed: int = 0,
     bad driver rollout).  Candidate failures are drawn at the storm-peak
     rate and thinned outside the window, so the process is an exact
     non-homogeneous Poisson draw and fully determined by ``seed``."""
+    _check_rates(horizon_s, mtbf_s=mtbf_s, mttr_s=mttr_s)
+    _check_storm(storm, horizon_s)
+    if nodes is not None and not nodes:
+        raise ValueError("failure_storm: nodes=[] would emit no events; "
+                         "pass nodes=None to cover all n_nodes")
+    if n_nodes <= 0 and nodes is None:
+        raise ValueError(f"failure_storm: n_nodes must be positive, "
+                         f"got {n_nodes!r}")
     rng = np.random.default_rng(seed)
     node_ids = list(range(n_nodes)) if nodes is None else list(nodes)
     peak = storm[2] if storm else 1.0
@@ -107,6 +157,13 @@ def spot_churn(spot_nodes: list[int], horizon_s: float, seed: int = 0,
     notice) around the window end, with per-node jitter.  With
     probability ``surprise_p`` per window the revoke instead lands
     mid-window with NO warning (capacity reclaimed early)."""
+    if not spot_nodes:
+        raise ValueError("spot_churn: spot_nodes is empty — pass the ids "
+                         "returned by Cluster.add_spot_nodes")
+    _check_rates(horizon_s, period_s=period_s)
+    if not (0.0 < window_frac <= 1.0):
+        raise ValueError(f"spot_churn: window_frac must be in (0, 1], "
+                         f"got {window_frac!r}")
     rng = np.random.default_rng(seed)
     events: list[CapacityEvent] = []
     n_periods = int(math.ceil(horizon_s / period_s))
@@ -129,6 +186,80 @@ def spot_churn(spot_nodes: list[int], horizon_s: float, seed: int = 0,
                     warning_s=0.0 if surprise else warning_s,
                     kind="spot-revoke"))
     events.sort(key=lambda e: (e.time, e.node, not e.down))
+    return events
+
+
+@dataclass(frozen=True)
+class DegradationEvent:
+    """One gray-failure transition on a node (EV_DEGRADE).
+
+    ``factor > 1`` slows every job with a worker on the node by that
+    multiple of measured T_iter (the gang is gated by its slowest
+    worker); ``factor == 1.0`` restores full speed.  ``hang=True``
+    marks the episode as a hang rather than a throttle — same slowdown
+    mechanics, but the factor is large enough that the job effectively
+    stalls.  ``kind`` is an accounting label only."""
+    time: float
+    node: int
+    factor: float
+    hang: bool = False
+    kind: str = "degrade"    # degrade | hang | recover
+
+
+def degradation_storm(n_nodes: int, horizon_s: float, seed: int = 0,
+                      mtbd_s: float = 2 * 86400.0,
+                      mttr_s: float = 2 * 3600.0,
+                      slowdown: tuple[float, float] = (2.0, 6.0),
+                      hang_p: float = 0.1, hang_factor: float = 25.0,
+                      storm: tuple[float, float, float] | None = None,
+                      nodes: list[int] | None = None
+                      ) -> list[DegradationEvent]:
+    """Per-node gray-failure process over ``[0, horizon_s)``.
+
+    Episodes arrive per node with exponential inter-arrival ``mtbd_s``
+    (mean time between degradations) and last ``Exp(mttr_s)``; each
+    draws a slowdown factor uniformly from ``slowdown``, or — with
+    probability ``hang_p`` — hangs at ``hang_factor``.  A recovery
+    event (``factor=1.0``) closes every episode that ends inside the
+    horizon.  ``storm`` intensifies the hazard inside a window exactly
+    like :func:`failure_storm` (thinned non-homogeneous Poisson), so
+    the stream is fully determined by ``seed``."""
+    _check_rates(horizon_s, mtbd_s=mtbd_s, mttr_s=mttr_s)
+    _check_storm(storm, horizon_s)
+    if nodes is not None and not nodes:
+        raise ValueError("degradation_storm: nodes=[] would emit no "
+                         "events; pass nodes=None to cover all n_nodes")
+    if n_nodes <= 0 and nodes is None:
+        raise ValueError(f"degradation_storm: n_nodes must be positive, "
+                         f"got {n_nodes!r}")
+    lo, hi = slowdown
+    if not (1.0 < lo <= hi):
+        raise ValueError(f"degradation_storm: slowdown bounds must "
+                         f"satisfy 1 < lo <= hi, got {slowdown!r}")
+    rng = np.random.default_rng(seed)
+    node_ids = list(range(n_nodes)) if nodes is None else list(nodes)
+    peak = storm[2] if storm else 1.0
+    events: list[DegradationEvent] = []
+    for nid in node_ids:
+        t = 0.0
+        while True:
+            t += float(rng.exponential(mtbd_s / peak))
+            if t >= horizon_s:
+                break
+            mult = peak if (storm and storm[0] <= t < storm[1]) else 1.0
+            if rng.random() >= mult / peak:          # thinned candidate
+                continue
+            hang = rng.random() < hang_p
+            factor = hang_factor if hang \
+                else float(rng.uniform(lo, hi))
+            events.append(DegradationEvent(
+                t, nid, factor=factor, hang=hang,
+                kind="hang" if hang else "degrade"))
+            t += float(rng.exponential(mttr_s))
+            if t < horizon_s:
+                events.append(DegradationEvent(t, nid, factor=1.0,
+                                               kind="recover"))
+    events.sort(key=lambda e: (e.time, e.node, e.factor))
     return events
 
 

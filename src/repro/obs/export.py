@@ -42,6 +42,10 @@ KIND_FIELDS: dict[str, tuple] = {
     "pause": ("job", "cause", "data"),
     "complete": ("job", "data"),
     "refit": ("data",),
+    "degrade": ("data",),
+    "quarantine": ("data",),
+    "retry": ("job", "cause", "data"),
+    "mitigate": ("job", "cause", "data"),
 }
 assert set(KIND_FIELDS) == set(KINDS)
 

@@ -33,7 +33,7 @@ from collections import deque
 # schema round-trip test instead of producing an unparseable log.
 KINDS = ("arrival", "admit", "reconfig", "shrink", "preempt", "park",
          "wake", "capacity", "evict", "checkpoint", "pause", "complete",
-         "refit")
+         "refit", "degrade", "quarantine", "retry", "mitigate")
 
 
 class _Ring:

@@ -55,6 +55,29 @@ def attribution(trace: Trace) -> list[dict]:
     return rows
 
 
+def gray_failures(trace: Trace) -> list[dict]:
+    """Join every quarantine decision to the degradation events that
+    preceded it on the same node, plus the mitigations (migrate-away /
+    rollback) it triggered — the gray-failure counterpart of the
+    capacity ``attribution`` table."""
+    deg_by_node: dict[int, list[dict]] = {}
+    for ev in trace.by_kind("degrade"):
+        deg_by_node.setdefault(ev["data"]["node"], []).append(ev)
+    rows = []
+    for ev in trace.by_kind("quarantine"):
+        if not ev["data"].get("on", True):
+            continue
+        node = ev["data"]["node"]
+        trigs = [d["data"] for d in deg_by_node.get(node, [])
+                 if d["t"] <= ev["t"] and d["data"].get("factor", 1) > 1]
+        mits = [m for m in trace.by_kind("mitigate") if m["t"] == ev["t"]]
+        rows.append({"t": ev["t"], "node": node,
+                     "score": ev["data"].get("score"),
+                     "triggers": trigs,
+                     "mitigations": [(m["job"], m["cause"]) for m in mits]})
+    return rows
+
+
 def _series_digest(points: list) -> dict:
     if not points:
         return {"n": 0}
@@ -101,6 +124,19 @@ def summary(path: str, perfetto: str | None = None,
             print(f"    t={r['t']:>10.1f}s {r['job']:<12} "
                   f"{r['outcome']:<7} nodes={r['lost_nodes']} "
                   f"via [{kinds}]", file=out)
+    gf = gray_failures(tr)
+    if gf:
+        n_retry = tr.counts.get("retry", 0)
+        print(f"  quarantines: {len(gf)} "
+              f"(degrade events {tr.counts.get('degrade', 0)}, "
+              f"op retries {n_retry})", file=out)
+        for r in gf:
+            mits = ", ".join(f"{j}:{c}" for j, c in r["mitigations"]) \
+                or "-"
+            print(f"    t={r['t']:>10.1f}s node={r['node']} "
+                  f"score={r['score']:.2f} "
+                  f"deg_events={len(r['triggers'])} moved=[{mits}]",
+                  file=out)
     for name in sorted(tr.series):
         print(f"  series {name:<22} {_series_digest(tr.series[name])}",
               file=out)

@@ -138,9 +138,9 @@ class CheckpointManager:
         """Seconds a restart from this state would cost: total checkpoint
         bytes (every param/opt leaf) through the shared restore-bandwidth
         model — the same formula the simulator charges simulated failures
-        via ``memory.ckpt_state_bytes`` (there, sized analytically from
-        the model profile instead of live arrays)."""
-        from repro.core.memory import restore_seconds
+        via ``memory.restore_cost(profile=...)`` (there, sized
+        analytically from the model profile instead of live arrays)."""
+        from repro.core.memory import restore_cost
         nbytes = 0
         leaves = jax.tree.leaves({"params": params,
                                   **({"opt": opt_state}
@@ -148,7 +148,7 @@ class CheckpointManager:
         for leaf in leaves:
             nbytes += int(np.prod(np.shape(leaf))) \
                 * np.dtype(getattr(leaf, "dtype", np.float32)).itemsize
-        return restore_seconds(float(nbytes))
+        return restore_cost(nbytes=float(nbytes))
 
     def _gc(self) -> None:
         steps = self.list_steps()

@@ -221,6 +221,54 @@ def test_killed_job_restart_pays_restore_pause():
     assert failed.jcts["solo"] >= base.jcts["solo"] + 1000.0
 
 
+@pytest.mark.parametrize("mode", ["event", "discrete"])
+def test_second_capacity_event_during_restore_pause(mode):
+    """A killed job restarts on the surviving node and is INSIDE its
+    restore pause when that node fails too (t=1005, pause ends ~1009);
+    it must be killed again, wait out both outages, pay a fresh restore,
+    and still finish — with both pass engines bit-exact throughout."""
+    jobs = [_job("solo", paper_models.profile("roberta-355m"), 8,
+                 iters=30000.0)]
+    cap = [CapacityEvent(1000.0, 0, down=True),
+           CapacityEvent(1005.0, 1, down=True),     # mid-restore-pause
+           CapacityEvent(3000.0, 0, down=False, kind="recover"),
+           CapacityEvent(5000.0, 1, down=False, kind="recover")]
+
+    def world():
+        return Cluster(n_nodes=2)
+
+    base = _sim("rubick", world(), jobs, recovery="kill")
+    results = {}
+    for engine in ("full", "incremental"):
+        res = _sim("rubick", world(), jobs, cap, engine=engine,
+                   mode=mode, recovery="kill")
+        assert res.n_cap_events == 4
+        assert res.n_kill_requeue == 2       # killed again mid-restore
+        # survived both outages: at least the second outage's duration
+        # (1005 -> 3000) plus one restore pause lands on the JCT
+        assert res.jcts["solo"] >= base.jcts["solo"] + 1995.0
+        results[engine] = res
+    _assert_exact(results["full"], results["incremental"])
+
+
+@pytest.mark.parametrize("mode", ["event", "discrete"])
+def test_recovery_event_during_restore_pause(mode):
+    """The OTHER node comes back while a restarted job is still paying
+    its restore pause: the pause must run to completion (no re-plan
+    interrupts it with a second restore) and the engines stay exact."""
+    jobs = [_job("solo", paper_models.profile("roberta-355m"), 8,
+                 iters=30000.0)]
+    cap = [CapacityEvent(1000.0, 0, down=True),
+           CapacityEvent(1005.0, 0, down=False, kind="recover")]
+    results = {}
+    for engine in ("full", "incremental"):
+        res = _sim("rubick", Cluster(n_nodes=2), jobs, cap,
+                   engine=engine, mode=mode, recovery="kill")
+        assert res.n_cap_events == 2 and res.n_kill_requeue == 1
+        results[engine] = res
+    _assert_exact(results["full"], results["incremental"])
+
+
 # --- parity: incremental ≡ full and event ≈ discrete under churn -------------
 
 @pytest.mark.parametrize("mode", ["event", "discrete"])

@@ -1,0 +1,375 @@
+"""Gray-failure resilience (ISSUE 10 tentpole).
+
+Directed mechanics: degradation storms are seeded/deterministic and
+validated; a degraded node slows every gang it hosts in BOTH engines;
+the health monitor attributes sustained measured≫predicted gaps to the
+shared node (not to model drift) and quarantines it; degraded-node
+observations are masked from the calibration manager so no bogus refit
+fires; flaky reconfig/restore ops retry with backoff and provably roll
+back on exhaustion (sanitizer-checked).
+
+Properties: incremental ≡ full stays bit-exact under combined
+degradation + capacity churn + flaky ops, and a traced run is
+decision-identical to an untraced one with a schema-valid log.
+"""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.calibration import CalibrationManager, DriftConfig, DriftDetector
+from repro.core import baselines, paper_models, trace
+from repro.core.cluster import Cluster, Job
+from repro.core.simulator import Simulator
+from repro.health import FlakyConfig, FlakyOps, HealthConfig, HealthMonitor
+from repro.parallel.plan import ExecutionPlan
+
+FIT_CACHE: dict = {}
+
+
+def _job(name, profile, req_gpus, submit=0.0, guaranteed=True, iters=1e6):
+    return Job(name=name, profile=profile, submit=submit,
+               target_iters=iters, req_gpus=req_gpus,
+               req_cpus=12 * req_gpus, orig_plan=ExecutionPlan(dp=1),
+               guaranteed=guaranteed)
+
+
+def _sim(cluster, jobs, *, engine="incremental", mode="event",
+         capacity=None, degradation=None, health=None, flaky=None,
+         calibration=None, recorder=None, max_time=4 * 86400.0,
+         elastic=True):
+    make = baselines.make_rubick if elastic else baselines.make_rubick_e
+    sched = make(pass_engine=engine)
+    # a refit publishes new FitParams into the sim's fit cache — give
+    # calibration runs a private copy so tests can't poison each other
+    cache = dict(FIT_CACHE) if calibration is not None else FIT_CACHE
+    sim = Simulator(cluster, sched, fit_cache=cache, mode=mode,
+                    capacity=capacity, degradation=degradation,
+                    health=health, flaky=flaky, calibration=calibration,
+                    recorder=recorder)
+    return sim.run(jobs, max_time=max_time), sim
+
+
+# --- trace generator: determinism + validation (satellite 1) -----------------
+
+def test_degradation_storm_deterministic_and_sorted():
+    a = trace.degradation_storm(4, 86400.0, seed=5, mtbd_s=4 * 3600.0,
+                                mttr_s=3600.0, storm=(0.0, 8 * 3600.0, 5.0))
+    assert a == trace.degradation_storm(4, 86400.0, seed=5,
+                                        mtbd_s=4 * 3600.0, mttr_s=3600.0,
+                                        storm=(0.0, 8 * 3600.0, 5.0))
+    assert a, "storm window at 5x should produce degradations"
+    assert all(e1.time <= e2.time for e1, e2 in zip(a, a[1:]))
+    assert all(e.factor > 1.0 for e in a if e.kind in ("degrade", "hang"))
+    assert all(e.factor == 1.0 for e in a if e.kind == "recover")
+    # every recover follows a degrade for its node
+    state: dict[int, bool] = {}
+    for e in a:
+        if e.kind == "recover":
+            assert state.get(e.node), f"recover before degrade on {e.node}"
+            state[e.node] = False
+        else:
+            state[e.node] = True
+
+
+@pytest.mark.parametrize("kwargs,match", [
+    (dict(n_nodes=0), "n_nodes"),
+    (dict(nodes=[]), "nodes"),
+    (dict(mtbd_s=0.0), "mtbd_s"),
+    (dict(mttr_s=-1.0), "mttr_s"),
+    (dict(slowdown=(0.5, 2.0)), "slowdown"),
+    (dict(slowdown=(3.0, 2.0)), "slowdown"),
+    (dict(storm=(10.0, 10.0, 2.0)), "empty"),
+    (dict(storm=(90000.0, 95000.0, 2.0)), "outside"),
+    (dict(storm=(0.0, 3600.0, 0.0)), "rate_mult"),
+])
+def test_degradation_storm_rejects_degenerate_inputs(kwargs, match):
+    base = dict(n_nodes=4, horizon_s=86400.0)
+    with pytest.raises(ValueError, match=match):
+        trace.degradation_storm(**{**base, **kwargs})
+
+
+@pytest.mark.parametrize("call,match", [
+    (lambda: trace.failure_storm(0, 86400.0), "n_nodes"),
+    (lambda: trace.failure_storm(4, 86400.0, nodes=[]), "nodes"),
+    (lambda: trace.failure_storm(4, 86400.0, mtbf_s=0.0), "mtbf_s"),
+    (lambda: trace.failure_storm(4, 86400.0, mttr_s=-5.0), "mttr_s"),
+    (lambda: trace.failure_storm(4, 0.0), "horizon_s"),
+    (lambda: trace.failure_storm(4, 86400.0,
+                                 storm=(90000.0, 99000.0, 2.0)), "outside"),
+    (lambda: trace.failure_storm(4, 86400.0,
+                                 storm=(3600.0, 600.0, 2.0)), "empty"),
+    (lambda: trace.spot_churn([], 86400.0), "spot_nodes"),
+    (lambda: trace.spot_churn([1], 86400.0, period_s=0.0), "period_s"),
+    (lambda: trace.spot_churn([1], 86400.0, window_frac=0.0),
+     "window_frac"),
+    (lambda: trace.spot_churn([1], 86400.0, window_frac=1.5),
+     "window_frac"),
+])
+def test_capacity_generators_reject_degenerate_inputs(call, match):
+    with pytest.raises(ValueError, match=match):
+        call()
+
+
+# --- degradation slows gangs in both engines ---------------------------------
+
+@pytest.mark.parametrize("mode", ["event", "discrete"])
+def test_degraded_node_gates_the_gang(mode):
+    """A permanent 4x slowdown on the job's only node must stretch its
+    JCT by ~4x of the remaining work — in both engines.  The scheduler
+    is oblivious (no health monitor): nothing migrates."""
+    jobs = [_job("solo", paper_models.profile("roberta-355m"), 8,
+                 iters=30000.0)]
+    clean, _ = _sim(Cluster(n_nodes=1), jobs, mode=mode)
+    deg = [trace.DegradationEvent(time=1000.0, node=0, factor=4.0)]
+    slow, _ = _sim(Cluster(n_nodes=1), jobs, mode=mode, degradation=deg)
+    t0 = clean.jcts["solo"]
+    expect = 1000.0 + (t0 - 1000.0) * 4.0
+    assert slow.jcts["solo"] == pytest.approx(expect, rel=0.05)
+    assert slow.n_degrade_events == 1
+
+
+# --- health monitor: attribution unit tests ----------------------------------
+
+def _feed(hm, t0, job, key, nodes, ratio, n=4, dt=300.0):
+    for i in range(n):
+        hm.observe(t0 + i * dt, job, key, frozenset(nodes),
+                   measured=ratio, predicted=1.0)
+
+
+def test_blame_intersects_cross_job_placements():
+    """Two suspect jobs of different models share exactly node 0: the
+    intersection is blamed, the disjoint remainder is not."""
+    hm = HealthMonitor()
+    _feed(hm, 0.0, "a", "m1", {0, 1}, 4.0)
+    _feed(hm, 0.0, "b", "m2", {0, 2}, 4.0)
+    rep = hm.poll(1200.0)
+    assert rep.quarantine == [0]
+    assert hm.quarantined == {0}
+    assert hm.score(0) < hm.cfg.quarantine_below
+    assert hm.score(1) == 1.0 and hm.score(2) == 1.0
+
+
+def test_drift_is_not_blamed_on_nodes():
+    """EVERY placement of one model key runs slow and no disjoint
+    healthy observation exists — indistinguishable from model drift, so
+    no node may be blamed."""
+    hm = HealthMonitor()
+    _feed(hm, 0.0, "a", "m1", {0, 1}, 4.0)
+    _feed(hm, 0.0, "b", "m1", {0, 1}, 4.0)
+    rep = hm.poll(1200.0)
+    assert rep.quarantine == [] and hm.n_blames == 0
+
+
+def test_healthy_same_key_on_disjoint_placement_rules_out_drift():
+    hm = HealthMonitor()
+    _feed(hm, 0.0, "a", "m1", {0}, 4.0)          # single-node: suspect
+    _feed(hm, 0.0, "b", "m1", {1}, 1.0)          # same key, healthy
+    rep = hm.poll(1200.0)
+    assert rep.quarantine == [0]
+
+
+def test_sustained_evidence_required():
+    """Three suspect observations are below min_suspect=4: no blame."""
+    hm = HealthMonitor()
+    _feed(hm, 0.0, "a", "m1", {0}, 4.0, n=3)
+    _feed(hm, 0.0, "b", "m1", {1}, 1.0)
+    assert hm.poll(900.0).quarantine == []
+    assert hm.n_suspect_obs == 3 and hm.n_blames == 0
+
+
+def test_probation_release_and_ledger_replay():
+    hm = HealthMonitor()
+    _feed(hm, 0.0, "a", "m1", {0}, 4.0)
+    _feed(hm, 0.0, "b", "m1", {1}, 1.0)
+    assert hm.poll(1200.0).quarantine == [0]
+    assert 0 in hm.excluded_nodes
+    # released after probation at the hysteresis score, via the ledger
+    rep = hm.poll(1200.0 + hm.cfg.probation_s)
+    assert rep.release == [0] and hm.quarantined == set()
+    assert hm.score(0) == pytest.approx(hm.cfg.recover_above)
+    assert 0 in hm.excluded_nodes                # still < 1.0: masked
+    # healthy evidence heals the rest back
+    for i in range(5):
+        hm.observe(6000.0 + i, "a", "m1", frozenset({0}), 1.0, 1.0)
+    assert hm.score(0) == 1.0
+    assert 0 not in hm.excluded_nodes
+    # the live scores are exactly the ledger replay (sanitizer invariant)
+    assert hm.recompute_scores() == hm.scores
+
+
+def test_op_debit_drives_quarantine():
+    hm = HealthMonitor()
+    hm.debit(10.0, 3)
+    hm.debit(20.0, 3)
+    assert hm.score(3) == pytest.approx(1.0 - 2 * hm.cfg.op_debit)
+    assert hm.poll(30.0).quarantine == [3]
+
+
+# --- flaky ops: deterministic pricing ----------------------------------------
+
+def test_flaky_attempt_deterministic_and_priced():
+    cfg = FlakyConfig(fail_p=0.9999, timeout_s=90.0, backoff_s=30.0,
+                      max_attempts=3, seed=1, ops=("reconfig",))
+    fl = FlakyOps(cfg)
+    o = fl.attempt("reconfig", "j")
+    assert not o.ok and o.n_attempts == 3
+    # 3 timeouts + backoff 30*(1+2+4)
+    assert o.delay_s == pytest.approx(3 * 90.0 + 30.0 * 7.0)
+    assert fl.n_retries == 2 and fl.n_rollbacks == 1
+    # ops outside the selected set are free successes
+    assert fl.attempt("restore", "j") == \
+        FlakyOps(cfg).attempt("restore", "j")
+    assert fl.attempt("restore", "j").ok
+    # same (seed, op, job, occurrence) stream replays identically
+    fl2 = FlakyOps(cfg)
+    assert fl2.attempt("reconfig", "j").delay_s == o.delay_s
+
+
+@pytest.mark.parametrize("kwargs", [dict(fail_p=1.0), dict(fail_p=-0.1),
+                                    dict(max_attempts=0)])
+def test_flaky_config_validation(kwargs):
+    with pytest.raises(ValueError):
+        FlakyConfig(**kwargs)
+
+
+# --- no spurious refits on degraded-node observations ------------------------
+
+def _refit_world():
+    """Two same-model jobs, one pinned per node (rubick-e: no elastic
+    reallocation, so each 8-GPU gang consolidates on its own node);
+    node 0 degrades permanently at t=500 under a STATIC oracle — every
+    measured≫predicted gap is the gray failure's, not drift's.  Timing:
+    blame lands at t=1500 (the resample at the t=500 degradation event
+    adds a fifth suspect obs: 5/7 window obs ≥ 0.7), the drift floor of
+    16 obs (2 jobs x 300 s cadence) is reached at t=2100 — and at every
+    tick the health poll runs BEFORE cal.poll, so the exclusion is
+    already in place."""
+    prof = paper_models.profile("roberta-355m")
+    jobs = [_job("a", prof, 8, iters=1e6), _job("b", prof, 8, iters=1e6)]
+    deg = [trace.DegradationEvent(time=500.0, node=0, factor=4.0)]
+    # threshold sits ABOVE the fit's true residual bias (~8%, RMSLE
+    # ≈ 0.08 — a legitimate refit trigger at a tighter threshold) and
+    # far BELOW the degraded mixture (RMSLE ≈ 0.8), so the only way to
+    # refit is to let node-0 observations poison the window
+    cal = CalibrationManager(detector=DriftDetector(DriftConfig(
+        threshold=0.15, min_observations=16, cooldown_s=3600.0)))
+    return jobs, deg, cal
+
+
+def test_degradation_without_health_triggers_bogus_refit():
+    """Control: no monitor, so the inflated node-0 observations look
+    exactly like model drift and the manager refits on garbage."""
+    jobs, deg, cal = _refit_world()
+    res, _ = _sim(Cluster(n_nodes=2), jobs, degradation=deg,
+                  calibration=cal, max_time=14400.0, elastic=False)
+    assert res.n_refits > 0
+
+
+def test_health_exclusion_prevents_bogus_refit():
+    """With the monitor attached, node 0 is blamed BEFORE the drift
+    floor is reached and its observations are masked retroactively:
+    zero refits on the same scenario (pinned)."""
+    jobs, deg, cal = _refit_world()
+    hm = HealthMonitor()
+    res, _ = _sim(Cluster(n_nodes=2), jobs, degradation=deg,
+                  calibration=cal, health=hm, max_time=14400.0,
+                  elastic=False)
+    assert hm.n_blames > 0 and res.n_quarantined > 0
+    assert res.n_refits == 0
+    assert 0 in cal._excluded
+
+
+# --- quarantine end-to-end (sanitized) ---------------------------------------
+
+@pytest.mark.parametrize("mode", ["event", "discrete"])
+def test_quarantine_migrates_and_releases_e2e(mode, monkeypatch):
+    """Full path under the runtime sanitizer: degrade → blame →
+    quarantine (walks skip the node) → migrate residents → probation
+    release → the node serves placements again."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    prof = paper_models.profile("roberta-355m")
+    jobs = [_job("a", prof, 8, iters=3e5), _job("b", prof, 8, iters=3e5)]
+    deg = [trace.DegradationEvent(time=500.0, node=0, factor=5.0),
+           trace.DegradationEvent(time=4000.0, node=0, factor=1.0,
+                                  kind="recover")]
+    hm = HealthMonitor()
+    res, sim = _sim(Cluster(n_nodes=2), jobs, mode=mode,
+                    degradation=deg, health=hm, max_time=86400.0,
+                    elastic=False)
+    assert res.n_quarantined >= 1
+    assert res.n_migrate >= 1
+    assert hm.n_releases >= 1                 # probation ended in-run
+    assert res.n_degrade_events == 2
+    # both jobs finished despite losing half the cluster for a while
+    assert all(s.status == "done" for s in sim.last_states)
+
+
+def test_rollback_exhaustion_is_sanitizer_checked(monkeypatch):
+    """fail_p≈1 on reconfigs: every elective reconfiguration exhausts
+    its retry budget and rolls back to the prior committed plan; the
+    sanitizer asserts the restored plan/alloc/placement exactly."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    jobs = trace.generate(n_jobs=12, hours=3, seed=2, load_scale=3.0)
+    fl = FlakyOps(FlakyConfig(fail_p=0.9999, max_attempts=2, seed=3,
+                              ops=("reconfig",)))
+    res, _ = _sim(Cluster(n_nodes=4), jobs, flaky=fl)
+    assert res.n_op_rollbacks > 0
+    assert res.n_op_rollbacks == fl.n_rollbacks
+    assert res.n_op_retries == fl.n_retries
+
+
+# --- parity + traced ≡ untraced ----------------------------------------------
+
+def _grayfail_fingerprint(res):
+    return (res.jcts, res.makespan, res.n_reconfig, res.n_events,
+            res.guarantee_violations, res.n_cap_events,
+            res.n_degrade_events, res.n_quarantined, res.n_migrate,
+            res.n_op_retries, res.n_op_rollbacks)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 200),
+       mode=st.sampled_from(["event", "discrete"]))
+def test_parity_property_under_gray_failures(seed, mode):
+    """Property: quarantine/migrate/rollback dirty sets keep the
+    incremental pass engine bit-exact with the full rebuild on random
+    degradation + failure storms with flaky ops."""
+    jobs = trace.philly(n_jobs=14, hours=4, seed=seed, load_scale=3.0)
+    deg = trace.degradation_storm(4, 86400.0, seed=seed + 3,
+                                  mtbd_s=4 * 3600.0, mttr_s=2 * 3600.0,
+                                  slowdown=(3.0, 6.0),
+                                  storm=(0.0, 8 * 3600.0, 4.0))
+    cap = trace.failure_storm(4, 86400.0, seed=seed + 9,
+                              mtbf_s=12 * 3600.0, mttr_s=1800.0)
+    fps = []
+    for engine in ("full", "incremental"):
+        res, _ = _sim(Cluster(n_nodes=4), jobs, engine=engine, mode=mode,
+                      capacity=cap, degradation=deg,
+                      health=HealthMonitor(),
+                      flaky=FlakyOps(FlakyConfig(fail_p=0.5, seed=2)))
+        fps.append(_grayfail_fingerprint(res))
+    assert fps[0] == fps[1]
+
+
+def test_traced_run_is_decision_identical_and_schema_valid():
+    from repro.obs import FlightRecorder, validate_events
+    jobs = trace.generate(n_jobs=10, hours=3, seed=6, load_scale=3.0)
+    deg = trace.degradation_storm(2, 86400.0, seed=4, mtbd_s=3 * 3600.0,
+                                  mttr_s=2 * 3600.0, slowdown=(3.0, 6.0),
+                                  storm=(0.0, 8 * 3600.0, 5.0))
+    fl = lambda: FlakyOps(FlakyConfig(fail_p=0.6, seed=5))  # noqa: E731
+    plain, _ = _sim(Cluster(n_nodes=2), jobs, degradation=deg,
+                    health=HealthMonitor(), flaky=fl())
+    rec = FlightRecorder(meta={"test": "grayfail"})
+    traced, _ = _sim(Cluster(n_nodes=2), jobs, degradation=deg,
+                     health=HealthMonitor(), flaky=fl(), recorder=rec)
+    assert _grayfail_fingerprint(plain) == _grayfail_fingerprint(traced)
+    events = list(rec.events)
+    assert validate_events(events) == len(events) > 0
+    kinds = {ev["kind"] for ev in events}
+    assert "degrade" in kinds
+    if traced.n_quarantined:
+        assert "quarantine" in kinds and "mitigate" in kinds
+    if traced.n_op_retries:
+        assert "retry" in kinds
